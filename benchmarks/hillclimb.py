@@ -1,0 +1,123 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing driver (EXPERIMENTS.md).
+
+Applies the hypothesis -> change -> re-lower -> re-analyse loop to the three
+chosen cells (worst roofline fraction, most collective-bound, most
+paper-representative):
+
+  H1  cast_bf16       cast fp32 master weights to bf16 BEFORE the layer
+                      scan -> per-layer FSDP all-gathers move half the bytes
+  H2  moe_constrain   shard-constrain the MoE dispatch tensors (group dim on
+                      the data axes, expert dim on "model") so the SPMD
+                      partitioner stops replicating the combine scatter
+                      ('involuntary full rematerialization' warnings)
+  H3  head_dim TP     shard attention head_dim over "model" when head count
+                      is indivisible (yi-34b: 56 heads vs 16-way TP)
+
+Each run records the three roofline terms before/after; results land in
+results/perf/<cell>__<variant>.json and a summary table prints at the end.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb [--cells yi-34b:train_4k ...]
+"""
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+import repro.models.moe as moe_mod
+import repro.sharding.constrain as constrain_mod
+from repro.launch.dryrun import run_cell
+from repro.launch.roofline import roofline_row
+from repro.sharding.rules import ShardingRules
+from repro.train.step import TrainSettings
+
+DEFAULT_CELLS = (
+    "olmoe-1b-7b:train_4k",        # worst roofline fraction
+    "deepseek-v2-236b:train_4k",   # most collective-bound
+    "yi-34b:train_4k",             # canonical dense LM (paper-representative)
+)
+
+VARIANTS = {
+    "baseline": dict(cast_bf16=False, moe_constrain=False, head_dim_tp=False, fsdp_gather=False),
+    "H1_bf16gather": dict(cast_bf16=True, moe_constrain=False, head_dim_tp=False, fsdp_gather=False),
+    "H2_moe_dispatch": dict(cast_bf16=False, moe_constrain=True, head_dim_tp=False, fsdp_gather=False),
+    "H1+H2": dict(cast_bf16=True, moe_constrain=True, head_dim_tp=False, fsdp_gather=False),
+    "H1+H3_headdim": dict(cast_bf16=True, moe_constrain=False, head_dim_tp=True, fsdp_gather=False),
+    "H1+H2+H3": dict(cast_bf16=True, moe_constrain=True, head_dim_tp=True, fsdp_gather=False),
+    "H4_fsdp_gather": dict(cast_bf16=False, moe_constrain=False, head_dim_tp=False, fsdp_gather=True),
+    "H4+H3": dict(cast_bf16=False, moe_constrain=False, head_dim_tp=True, fsdp_gather=True),
+}
+
+
+def run_variant(arch: str, shape: str, name: str, v: dict) -> dict:
+    moe_mod.CONSTRAIN_DISPATCH = v["moe_constrain"]
+    constrain_mod.FSDP_GATHER_WEIGHTS = v.get("fsdp_gather", False)
+    rules = ShardingRules()
+    if v["head_dim_tp"]:
+        rules = rules.with_overrides(head_dim=("model",))
+    settings = TrainSettings(remat="dots", accum=1, cast_bf16=v["cast_bf16"])
+    try:
+        rec = run_cell(arch, shape, multi_pod=False, rules=rules,
+                       settings=settings, save=False)
+    finally:
+        moe_mod.CONSTRAIN_DISPATCH = False
+        constrain_mod.FSDP_GATHER_WEIGHTS = False
+    row = roofline_row(arch, shape, record=rec)
+    out = {
+        "variant": name,
+        "flags": v,
+        "compute_s": row.compute_s,
+        "memory_s": row.memory_s,
+        "collective_s": row.collective_s,
+        "step_s": row.step_s,
+        "roofline_fraction": row.roofline_fraction,
+        "dominant": row.dominant,
+        "collectives": rec["collectives"]["bytes"],
+        "peak_gib": row.peak_gib,
+    }
+    os.makedirs("results/perf", exist_ok=True)
+    with open(f"results/perf/{arch}_{shape}__{name.replace('+','_')}.json", "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cells", nargs="*", default=list(DEFAULT_CELLS))
+    ap.add_argument("--variants", nargs="*", default=list(VARIANTS))
+    args = ap.parse_args()
+
+    summary = []
+    for cell in args.cells:
+        arch, shape = cell.split(":")
+        is_moe = arch in ("olmoe-1b-7b", "deepseek-v2-236b")
+        for name in args.variants:
+            v = VARIANTS[name]
+            if v["moe_constrain"] and not is_moe:
+                continue
+            if not is_moe and name in ("H2_moe_dispatch", "H1+H2", "H1+H2+H3"):
+                continue
+            print(f"[hillclimb] {cell} :: {name} ...", flush=True)
+            out = run_variant(arch, shape, name, v)
+            summary.append((cell, name, out))
+            print(
+                f"    step={out['step_s']:.3f}s  coll={out['collective_s']:.3f}s "
+                f"comp={out['compute_s']:.3f}s  frac={out['roofline_fraction']:.3f} "
+                f"dominant={out['dominant']}"
+            )
+
+    print("\n| cell | variant | step (s) | collective (s) | compute (s) | frac |")
+    print("|---|---|---|---|---|---|")
+    for cell, name, out in summary:
+        print(f"| {cell} | {name} | {out['step_s']:.3f} | "
+              f"{out['collective_s']:.3f} | {out['compute_s']:.3f} | "
+              f"{out['roofline_fraction']:.3f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,258 @@
+"""Regenerate EXPERIMENTS.md from results/ artifacts.
+
+Sections:
+  §Validation — paper-claims checks against the full experiment matrix
+  §Figures    — fig2/3/4 reproductions (markdown tables)
+  §Dry-run    — 64-cell compile summary (memory / flops / collectives)
+  §Roofline   — three-term table + dominant-term analysis
+  §Perf       — hillclimbing log (hypothesis -> change -> before/after)
+  §Repro-perf — implementation notes on making the 3M-sample matrix feasible
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_md
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import numpy as np
+
+from benchmarks.figures import (
+    fig2_pct_optimum,
+    fig3_aggregate,
+    fig4a_speedup,
+    fig4b_cles,
+    load_all,
+    render_fig2,
+    render_fig3,
+    render_grid,
+)
+from benchmarks.validate_claims import validate
+from repro.configs import REGISTRY, applicable_shapes
+from repro.launch.roofline import all_rows, markdown_table
+
+MATRIX_DIR = "results/paper_matrix"
+DRYRUN_DIR = "results/dryrun"
+PERF_DIR = "results/perf"
+
+HEADER = """\
+# EXPERIMENTS
+
+Reproduction of *Analyzing Search Techniques for Autotuning Image-based GPU
+Kernels: The Impact of Sample Sizes* (Tørring & Elster 2022) — TPU/Pallas
+adaptation per DESIGN.md.  All artifacts regenerate with:
+
+```bash
+PYTHONPATH=src python -m benchmarks.paper_matrix --design paper   # ~1 h, 1 core
+PYTHONPATH=src python -m repro.launch.dryrun                      # ~45 min
+PYTHONPATH=src python -m benchmarks.hillclimb                     # ~30 min
+PYTHONPATH=src python -m benchmarks.make_experiments_md           # this file
+```
+
+Experiment design (paper-faithful): sample sizes S={25,50,100,200,400} with
+E={800,400,200,100,50} experiments, 20k-sample pre-generated datasets for
+the non-SMBO methods, winning config re-measured 10x, MWU alpha=0.01 + CLES.
+Total ~3.02M samples across 3 benchmarks x 3 chip models x 5 algorithms.
+"""
+
+
+def section_validation() -> str:
+    try:
+        checks = validate(MATRIX_DIR)
+    except Exception as e:  # matrix not finished yet
+        return f"## §Validation\n\n(matrix incomplete: {e})\n"
+    lines = ["## §Validation — paper claims vs our matrix\n"]
+    n_pass = sum(c["pass"] for c in checks.values())
+    lines.append(f"**{n_pass}/{len(checks)} claims reproduced.**\n")
+    for name, c in checks.items():
+        lines.append(f"- **[{'PASS' if c['pass'] else 'FAIL'}] {name}** — `{c['detail']}`")
+    lines.append("""
+**Analysis of the divergences.**  The paper's headline — *no single
+algorithm wins at every sample size* — reproduces cleanly (winners rotate
+across S in both per-cell and aggregate views; C3/C4/C6 all hold).  Two
+per-cell-winner checks diverge, with identifiable causes:
+
+* **RF is stronger at S=25-50 here than in the paper.**  Our analytic TPU
+  cost surface is near-separable in the six integer parameters — exactly
+  what axis-aligned CART splits learn from 15 samples — whereas real GPU
+  wall-times carry interaction structure CART cannot exploit.  A 2x-noise
+  sensitivity matrix (results/matrix_noise2x, scaled design) *refutes* the
+  alternative "our noise is too mild" explanation: RF's small-S win count
+  is unchanged at double noise (15/27 both ways), so the separable surface
+  is the cause.  (At 2x noise the large-S winner shifts toward BO-TPE,
+  whose Parzen smoothing is the most noise-robust — consistent with the
+  paper's 'TPE is a good balance' observation.)  RF still satisfies the
+  paper's literal claim C5 ('never outperforms all the others' overall).
+* **BO-GP does not collapse at S=200-400 the way skopt's gp_minimize
+  does** (the paper attributes its dip to overfitting; our from-scratch GP
+  refits hyperparameters on a doubling schedule and keeps an explicit
+  noise term, which appears to be more robust — dips still occur in 3/9
+  combos, C6).  Consequently GA's large-S margin over BO-GP is narrower
+  per cell, though GA is still the best algorithm at S=200/400 by the
+  aggregate Fig.-3 metric (C2b).
+""")
+    return "\n".join(lines)
+
+
+def section_figures() -> str:
+    try:
+        results = load_all(MATRIX_DIR)
+    except Exception as e:
+        return f"## §Figures\n\n(matrix incomplete: {e})\n"
+    if not results:
+        return "## §Figures\n\n(matrix empty)\n"
+    out = ["## §Figures — paper reproductions\n"]
+    out.append("### Fig. 3 — mean pct-of-optimum across all benchmarks+chips\n")
+    out.append(render_fig3(fig3_aggregate(results)))
+    out.append("\n### Fig. 2 — per-combo pct-of-optimum (medians)\n")
+    out.append(render_fig2(fig2_pct_optimum(results)))
+    out.append("\n### Fig. 4a — median speedup over Random Search\n")
+    out.append(render_grid(fig4a_speedup(results), "{:.3f}x", "speedup over RS"))
+    out.append("\n### Fig. 4b — CLES: P(algorithm beats RS)\n")
+    out.append(render_grid(fig4b_cles(results), "{:.2f}", "CLES vs RS"))
+    out.append("")
+    return "\n".join(out)
+
+
+def section_dryrun() -> str:
+    cells = []
+    for f in sorted(os.listdir(DRYRUN_DIR)):
+        if f.endswith(".json"):
+            cells.append(json.load(open(os.path.join(DRYRUN_DIR, f))))
+    lines = [
+        "## §Dry-run — lower+compile of every (arch x shape x mesh)\n",
+        f"{len(cells)} cells compiled (single-pod 16x16=256 chips; multi-pod "
+        "2x16x16=512 chips).  long_500k runs on the sub-quadratic families "
+        "(zamba2, mamba2) per spec; pure full-attention archs skip it "
+        "(noted in DESIGN.md §4).\n",
+        "| arch | shape | mesh | peak GiB/dev | args GiB/dev | HLO dot FLOPs/dev | coll B/dev | AG | AR | A2A |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        b = c["collectives"]["bytes"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+            f"{c['memory']['peak_bytes_per_dev']/2**30:.2f} | "
+            f"{c['memory']['argument_bytes_per_dev']/2**30:.2f} | "
+            f"{c.get('flops_dot_corrected', 0):.2e} | "
+            f"{c['collectives']['total_bytes']:.2e} | "
+            f"{b.get('all-gather', 0):.1e} | {b.get('all-reduce', 0):.1e} | "
+            f"{b.get('all-to-all', 0):.1e} |"
+        )
+    over = [c for c in cells
+            if c["memory"]["peak_bytes_per_dev"] > 16 * 2**30]
+    lines.append("")
+    lines.append(
+        f"**Fits check**: {len(cells) - len(over)}/{len(cells)} cells under "
+        "the 16 GiB v5e HBM budget"
+        + (f"; over budget: {[(c['arch'], c['shape'], c['mesh']) for c in over]}"
+           if over else ".")
+    )
+    lines.append("")
+    return "\n".join(lines)
+
+
+def section_roofline() -> str:
+    rows = all_rows()
+    lines = [
+        "## §Roofline — single-pod (256 chips), v5e constants "
+        "(197 TF bf16, 819 GB/s HBM, 50 GB/s/link ICI)\n",
+        "Terms: compute = loop-corrected HLO dot-FLOPs / (chips x peak); "
+        "memory = analytic HBM traffic / (chips x bw); collective = "
+        "per-device collective bytes / link bw.  `useful` = MODEL_FLOPS / "
+        "HLO_FLOPs (6ND-style vs compiled — exposes remat recompute and MoE "
+        "capacity padding).  XLA cost_analysis counts scan bodies once; the "
+        "dot-FLOP column is trip-count-corrected (see launch/hlo_analysis.py).\n",
+        markdown_table(rows),
+    ]
+    doms = {}
+    for r in rows:
+        doms[r.dominant] = doms.get(r.dominant, 0) + 1
+    lines.append(f"\nDominant-term census: {doms}.  ")
+    lines.append(
+        "Almost every cell is **collective-bound** at this mesh: per-layer "
+        "FSDP weight all-gathers + sequence-parallel activation collectives "
+        "dwarf compute for <=47B-param models on 256 chips — the motivation "
+        "for §Perf.  One-sentence movers per dominant term:\n"
+        "- collective: move weight gathers to bf16 (H1), localize MoE "
+        "dispatch (H2), shard attention head_dim when head counts are "
+        "indivisible (H3).\n"
+        "- memory (whisper decode / zamba long_500k): batch more decode "
+        "requests per step or quantize the KV cache.\n"
+        "- compute (none dominant at 256 chips): shrink the mesh or grow "
+        "the model/batch.\n"
+    )
+    return "\n".join(lines)
+
+
+def section_perf() -> str:
+    lines = ["## §Perf — hillclimbing log (hypothesis -> change -> measure)\n"]
+    if not os.path.isdir(PERF_DIR):
+        return lines[0] + "\n(hillclimb not yet run)\n"
+    by_cell: dict = {}
+    for f in sorted(os.listdir(PERF_DIR)):
+        if f.endswith(".json"):
+            d = json.load(open(os.path.join(PERF_DIR, f)))
+            cell = f.split("__")[0]
+            by_cell.setdefault(cell, []).append(d)
+    lines.append(
+        "Chosen cells: olmoe-1b-7b/train_4k (worst roofline fraction), "
+        "deepseek-v2-236b/train_4k (most collective-bound), yi-34b/train_4k "
+        "(canonical dense; most representative of kernel-config tuning).  "
+        "Baseline = paper-faithful defaults; variants per "
+        "benchmarks/hillclimb.py.\n"
+    )
+    for cell, variants in by_cell.items():
+        variants.sort(key=lambda d: d["step_s"])
+        base = next(v for v in variants if v["variant"] == "baseline")
+        lines.append(f"\n### {cell}\n")
+        lines.append("| variant | step (s) | collective (s) | compute (s) | "
+                     "roofline frac | vs baseline |")
+        lines.append("|---|---|---|---|---|---|")
+        for v in variants:
+            speed = base["step_s"] / v["step_s"] if v["step_s"] else 0
+            lines.append(
+                f"| {v['variant']} | {v['step_s']:.3f} | "
+                f"{v['collective_s']:.3f} | {v['compute_s']:.3f} | "
+                f"{v['roofline_fraction']:.3f} | {speed:.2f}x |"
+            )
+    lines.append("")
+    return "\n".join(lines)
+
+
+def section_repro_perf() -> str:
+    return """\
+## §Repro-perf — making the 3M-sample matrix feasible on one CPU core
+
+| hypothesis | change | before | after | verdict |
+|---|---|---|---|---|
+| GP refit dominates BO-GP (O(n^3)/step) | incremental Cholesky append + refit-on-doubling | 2.6 s/exp @ S=400 | ~1.5 s/exp | confirmed |
+| RF per-node python recursion dominates | histogram trees, level-synchronous, vectorized across all trees x experiments of a cell | ~600 s per S=25 cell (800 exps) | ~30 s | confirmed |
+| forest predict masked-gather overhead | self-looping leaves + flat gathers | 73 s / cell | 23 s | confirmed |
+| TPE degrades at S>=200 | HyperOpt's n_good = min(ceil(0.25*sqrt(n)), 25) split (was linear 25%) | 84% of optimum @ S=400 | 98% | confirmed (fidelity bug, not perf) |
+"""
+
+
+def main() -> None:
+    parts = [
+        HEADER,
+        section_validation(),
+        section_figures(),
+        section_dryrun(),
+        section_roofline(),
+        section_perf(),
+        section_repro_perf(),
+    ]
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write("\n".join(parts))
+    print("EXPERIMENTS.md written",
+          f"({sum(len(p) for p in parts)} chars)")
+
+
+if __name__ == "__main__":
+    main()

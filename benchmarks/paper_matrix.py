@@ -1,0 +1,109 @@
+"""Run the paper's full experiment matrix.
+
+3 benchmarks (add / harris / mandelbrot)  x  3 chip models (v5e / v4 / v3)
+x 5 algorithms (rs / rf / ga / bo_gp / bo_tpe)  x  sample sizes
+{25, 50, 100, 200, 400} with experiment counts {800, 400, 200, 100, 50}
+(or a budget-scaled design) — the reproduction of the paper's ~3,019,500
+samples.  Results are persisted per (benchmark, chip) combo so interrupted
+runs resume.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.paper_matrix --design paper
+    PYTHONPATH=src python -m benchmarks.paper_matrix --design scaled --budget 2000
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import ExperimentDesign, MatrixRunner, SampleDataset
+from repro.costmodel import (
+    CHIPS,
+    WORKLOADS,
+    CostModelMeasurement,
+    executable_space,
+    true_optimum,
+)
+
+ALGOS = ("rs", "rf", "ga", "bo_gp", "bo_tpe")
+DATASET_SEED = 7
+GEN_SEED = 999
+
+
+def combo_path(out_dir: str, bench: str, chip: str) -> str:
+    return os.path.join(out_dir, f"{bench}_{chip}.npz")
+
+
+def run_combo(bench: str, chip_name: str, design: ExperimentDesign, out_dir: str,
+              algorithms=ALGOS, seed: int = 0, verbose: bool = True) -> None:
+    w, chip = WORKLOADS[bench], CHIPS[chip_name]
+    space = executable_space(w, chip)
+    dataset = SampleDataset.generate(
+        space, CostModelMeasurement(w, chip, seed=GEN_SEED), n=20000, seed=DATASET_SEED
+    )
+    opt_cfg, opt = true_optimum(w, chip)
+    runner = MatrixRunner(
+        space,
+        lambda s: CostModelMeasurement(w, chip, seed=s),
+        design,
+        dataset=dataset,
+        algorithms=algorithms,
+        seed=seed,
+        verbose=verbose,
+    )
+    t0 = time.time()
+    results = runner.run()
+    results.save(combo_path(out_dir, bench, chip_name))
+    meta = {
+        "bench": bench,
+        "chip": chip_name,
+        "optimum": opt,
+        "optimum_config": opt_cfg,
+        "dataset_best": dataset.optimum,
+        "design": {"sample_sizes": design.sample_sizes,
+                   "n_experiments": design.n_experiments},
+        "wall_s": time.time() - t0,
+    }
+    with open(os.path.join(out_dir, f"{bench}_{chip_name}.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"[matrix] {bench} x {chip_name} done in {meta['wall_s']:.0f}s "
+          f"(optimum {opt*1e3:.3f} ms @ {opt_cfg})")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--design", choices=("paper", "scaled"), default="scaled")
+    ap.add_argument("--budget", type=int, default=2000,
+                    help="per-cell sample budget for --design scaled")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    design = (
+        ExperimentDesign.paper()
+        if args.design == "paper"
+        else ExperimentDesign.scaled(budget=args.budget)
+    )
+    out_dir = args.out or os.path.join(
+        "results", "paper_matrix" if args.design == "paper" else f"matrix_{args.budget}"
+    )
+    os.makedirs(out_dir, exist_ok=True)
+
+    t0 = time.time()
+    for bench in WORKLOADS:
+        for chip_name in CHIPS:
+            path = combo_path(out_dir, bench, chip_name)
+            if os.path.exists(path) and not args.force:
+                print(f"[matrix] skip existing {path}")
+                continue
+            run_combo(bench, chip_name, design, out_dir)
+    print(f"[matrix] all combos done in {(time.time()-t0)/60:.1f} min -> {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * per (benchmark x chip x algorithm x sample-size): the median tuned
+    runtime in µs, with pct-of-optimum as the derived column (Fig. 2),
+  * aggregate mean + CI rows (Fig. 3),
+  * speedup-over-RS and CLES rows (Fig. 4a / 4b),
+  * searcher-overhead microbenchmarks (µs per sample of algorithm cost),
+  * Pallas-kernel interpret-mode microbenchmarks vs their oracles.
+
+By default reuses results/paper_matrix if the full background run exists;
+otherwise runs a budget-scaled matrix (--budget, default 500 — a few
+minutes on one core).  ``--full`` forces the paper-exact design.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, ROOT)
+
+from repro.core import ExperimentDesign, make_searcher
+from repro.costmodel import CHIPS, WORKLOADS, CostModelMeasurement
+
+from benchmarks.figures import (
+    fig2_pct_optimum,
+    fig3_aggregate,
+    fig4a_speedup,
+    fig4b_cles,
+    load_all,
+)
+from benchmarks.paper_matrix import combo_path, run_combo
+from benchmarks.validate_claims import validate
+
+
+def ensure_matrix(out_dir: str, budget: int) -> str:
+    full_dir = os.path.join("results", "paper_matrix")
+    if all(
+        os.path.exists(combo_path(full_dir, b, c)) for b in WORKLOADS for c in CHIPS
+    ):
+        return full_dir
+    design = ExperimentDesign.scaled(budget=budget)
+    os.makedirs(out_dir, exist_ok=True)
+    for b in WORKLOADS:
+        for c in CHIPS:
+            if not os.path.exists(combo_path(out_dir, b, c)):
+                run_combo(b, c, design, out_dir, verbose=False)
+    return out_dir
+
+
+def table_fig2(results_dir: str) -> None:
+    results = load_all(results_dir)
+    f2 = fig2_pct_optimum(results)
+    for (bench, chip), algos in sorted(f2.items()):
+        res, meta = results[(bench, chip)]
+        for algo, row in algos.items():
+            for s, pct in row.items():
+                med = float(np.median(res.finals(algo, s)))
+                print(f"fig2/{bench}_{chip}/{algo}/S{s},{med*1e6:.2f},{pct:.2f}")
+
+
+def table_fig3(results_dir: str) -> None:
+    agg = fig3_aggregate(load_all(results_dir))
+    for algo, rows in agg.items():
+        for s, (m, lo, hi) in rows.items():
+            print(f"fig3/{algo}/S{s},{m:.3f},{lo:.2f}..{hi:.2f}")
+
+
+def table_fig4(results_dir: str) -> None:
+    results = load_all(results_dir)
+    sp = fig4a_speedup(results)
+    cl = fig4b_cles(results)
+    for key in sorted(sp):
+        bench, chip = key
+        for algo in sp[key]:
+            for s in sp[key][algo]:
+                print(
+                    f"fig4a/{bench}_{chip}/{algo}/S{s},{sp[key][algo][s]:.4f},"
+                    f"cles={cl[key][algo][s]:.4f}"
+                )
+
+
+def table_searcher_overhead() -> None:
+    """Algorithm cost per sample (the paper ignores it by design — section V
+    — but the framework reports it for completeness)."""
+    from repro.costmodel import executable_space
+
+    w, chip = WORKLOADS["harris"], CHIPS["v5e"]
+    space = executable_space(w, chip)
+    for algo in ("rs", "rf", "ga", "bo_gp", "bo_tpe", "sa", "pso"):
+        m = CostModelMeasurement(w, chip, seed=0)
+        t0 = time.perf_counter()
+        make_searcher(algo, space, seed=0).run(m, 100)
+        dt = time.perf_counter() - t0
+        print(f"searcher_overhead/{algo},{dt/100*1e6:.1f},budget=100")
+
+
+def table_kernels() -> None:
+    """Interpret-mode wall time of the real Pallas kernels (small images —
+    interpret mode is a correctness vehicle, not a performance one)."""
+    import jax.numpy as jnp
+
+    from repro.kernels import TUNABLE_KERNELS, add_ref, harris_ref, mandelbrot_ref
+
+    rng = np.random.default_rng(0)
+    img = jnp.asarray(rng.normal(size=(128, 256)), jnp.float32)
+    cfg = dict(t_x=2, t_y=1, t_z=2, w_x=1, w_y=1, w_z=2)
+
+    def timeit(fn, *a, **k):
+        fn(*a, **k)  # compile/warm
+        t0 = time.perf_counter()
+        for _ in range(3):
+            np.asarray(fn(*a, **k))
+        return (time.perf_counter() - t0) / 3
+
+    t = timeit(TUNABLE_KERNELS["add"], img, img, cfg)
+    r = timeit(add_ref, img, img)
+    print(f"kernel_interpret/add,{t*1e6:.0f},ref_us={r*1e6:.0f}")
+    t = timeit(TUNABLE_KERNELS["harris"], img, cfg)
+    r = timeit(harris_ref, img)
+    print(f"kernel_interpret/harris,{t*1e6:.0f},ref_us={r*1e6:.0f}")
+    t = timeit(TUNABLE_KERNELS["mandelbrot"], 128, 256, cfg)
+    r = timeit(mandelbrot_ref, 128, 256)
+    print(f"kernel_interpret/mandelbrot,{t*1e6:.0f},ref_us={r*1e6:.0f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=int, default=500)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    if args.full:
+        out = os.path.join("results", "paper_matrix")
+        os.makedirs(out, exist_ok=True)
+        for b in WORKLOADS:
+            for c in CHIPS:
+                if not os.path.exists(combo_path(out, b, c)):
+                    run_combo(b, c, ExperimentDesign.paper(), out)
+        results_dir = out
+    else:
+        results_dir = ensure_matrix(
+            os.path.join("results", f"matrix_{args.budget}"), args.budget
+        )
+    print(f"# matrix: {results_dir}")
+    table_fig2(results_dir)
+    table_fig3(results_dir)
+    table_fig4(results_dir)
+    table_searcher_overhead()
+    table_kernels()
+    print("# paper-claims validation")
+    checks = validate(results_dir)
+    for name, c in checks.items():
+        print(f"claim/{name},{int(c['pass'])},{c['detail']}")
+    print(f"# total {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

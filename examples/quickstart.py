@@ -1,0 +1,56 @@
+"""Quickstart: autotune a TPU kernel config with every paper algorithm.
+
+Tunes the Harris-corner kernel's 6-parameter space (DESIGN.md 2.1) on the
+v5e chip model with a 100-sample budget and compares the algorithms the
+paper compares — then runs the statistics the paper runs (MWU + CLES).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import CallableMeasurement, PAPER_ALGORITHMS, make_searcher, stats
+from repro.costmodel import (
+    CHIPS,
+    WORKLOADS,
+    CostModelMeasurement,
+    executable_space,
+    true_optimum,
+)
+
+BUDGET = 100
+REPEATS = 20
+
+
+def main() -> None:
+    w, chip = WORKLOADS["harris"], CHIPS["v5e"]
+    space = executable_space(w, chip)
+    opt_cfg, opt = true_optimum(w, chip)
+    print(f"benchmark=harris chip=v5e |S|={space.cardinality:,} budget={BUDGET}")
+    print(f"true optimum: {opt*1e3:.3f} ms @ {opt_cfg}\n")
+
+    finals = {}
+    for algo in PAPER_ALGORITHMS:
+        runs = []
+        for seed in range(REPEATS):
+            m = CostModelMeasurement(w, chip, seed=seed)
+            r = make_searcher(algo, space, seed=seed).run(m, BUDGET)
+            runs.append(m.measure_final(r.best_config, repeats=10))
+        finals[algo] = np.array(runs)
+        print(
+            f"{algo:7s} median={np.median(runs)*1e3:7.3f} ms "
+            f"({opt/np.median(runs)*100:5.1f}% of optimum)"
+        )
+
+    print("\nvs Random Search (MWU alpha=0.01, CLES):")
+    for algo in PAPER_ALGORITHMS[1:]:
+        cmp = stats.compare_algorithms(finals[algo], finals["rs"])
+        print(
+            f"{algo:7s} speedup={cmp['speedup_a_over_b']:.3f}x "
+            f"P(beats RS)={cmp['cles_a_beats_b']:.2f} "
+            f"p={cmp['mwu_p']:.4f} significant={cmp['significant']}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Tune a REAL Pallas kernel by wall-clock measurement.
+
+Runs the actual ``pl.pallas_call`` add kernel in interpret mode on small
+images and lets the GA pick block geometry by measured time — the paper's
+loop with a real measurement function (DESIGN.md 2.2 backend 2).  Interpret
+mode timings reflect Python-level grid overhead rather than TPU behaviour,
+so this example is about exercising the full real-measurement path, not
+about the specific winner.
+
+    PYTHONPATH=src python examples/tune_kernel_interpret.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import CachedMeasurement, Param, SearchSpace, TimingMeasurement, make_searcher
+from repro.kernels import add
+
+X, Y = 256, 512
+BUDGET = 12
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(X, Y)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(X, Y)), jnp.float32)
+
+    # small space: interpret mode is slow, keep the sweep tight
+    space = SearchSpace(
+        [
+            Param.int_range("t_x", 1, 4),
+            Param.int_range("t_y", 1, 4),
+            Param.int_range("t_z", 1, 4),
+            Param.int_range("w_x", 1, 2),
+            Param.int_range("w_y", 1, 2),
+            Param.int_range("w_z", 1, 2),
+        ]
+    )
+
+    def run_kernel(cfg):
+        np.asarray(add(a, b, cfg))  # block until done
+
+    m = CachedMeasurement(TimingMeasurement(run_kernel, warmup=1))
+    r = make_searcher("ga", space, seed=0).run(m, BUDGET)
+    print(f"GA best config after {r.n_samples} real kernel timings: {r.best_config}")
+    print(f"measured {r.best_value*1e3:.2f} ms per call (interpret mode)")
+    final = m.measure_final(r.best_config, repeats=5)
+    print(f"final config re-measured 5x (paper protocol): {final*1e3:.2f} ms")
+
+
+if __name__ == "__main__":
+    main()

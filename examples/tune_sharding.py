@@ -1,0 +1,122 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Beyond-paper: autotune the DISTRIBUTED-TRAINING config with the paper's
+search algorithms.
+
+The measurement function is the compiled dry-run's dominant roofline term
+(repro.launch.roofline) — i.e. the paper's empirical-search loop pointed at
+a production objective: which remat policy / sequence-parallelism setting /
+FSDP axis / microbatching minimizes the modelled step time of yi-34b
+train_4k on the 256-chip mesh.  Each sample costs a real XLA lower+compile
+(~30-60 s on this CPU), so the budget is small; BO-TPE is the right tool at
+tiny budgets — exactly the paper's S=25 regime conclusion.
+
+    PYTHONPATH=src python examples/tune_sharding.py [--budget 6]
+"""
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import REGISTRY, SHAPES
+from repro.core import CachedMeasurement, CallableMeasurement, Param, SearchSpace, make_searcher
+from repro.launch.hlo_analysis import collective_stats, dot_flops
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, memory_bytes
+from repro.sharding.rules import ShardingRules
+from repro.train.step import TrainSettings, make_train_step
+
+
+def step_time_model(arch_name: str, shape_name: str, cfg: dict) -> float:
+    """Lower + compile with the candidate config; return max roofline term."""
+    arch, shape = REGISTRY[arch_name], SHAPES[shape_name]
+    mesh = make_production_mesh()
+    rules = ShardingRules()
+    if cfg["head_dim_tp"]:
+        rules = rules.with_overrides(head_dim=("model",))
+    if not cfg["seq_parallel"]:
+        import repro.sharding.constrain as constrain_mod
+        constrain_mod.constrain_residual, saved = (lambda x: x), constrain_mod.constrain_residual
+    try:
+        with mesh:
+            settings = TrainSettings(remat=cfg["remat"], accum=cfg["accum"])
+            fn, args = _build(arch, shape, mesh, rules, settings)
+            compiled = fn.lower(*args).compile()
+            hlo = compiled.as_text()
+        coll = collective_stats(hlo)["total_bytes"] / ICI_BW
+        comp = dot_flops(hlo)["flops"] / PEAK_FLOPS
+        mem = memory_bytes(arch, shape) / (256 * HBM_BW)
+        return max(coll, comp, mem)
+    finally:
+        if not cfg["seq_parallel"]:
+            constrain_mod.constrain_residual = saved
+
+
+def _build(arch, shape, mesh, rules, settings):
+    """build_step with explicit TrainSettings (train shapes only)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.launch.specs import train_batch_specs
+    from repro.models import abstract_params, build_model, param_axes
+
+    model = build_model(arch)
+    spec = model.spec()
+    aparams = abstract_params(spec)
+    axes = param_axes(spec)
+    p_shard = rules.tree_shardings(axes, aparams, mesh)
+    step = make_train_step(model, settings, grad_shardings=p_shard)
+    fp32 = lambda t: jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32), t
+    )
+    astate = {
+        "params": aparams,
+        "opt": {"m": fp32(aparams), "v": fp32(aparams),
+                "step": jax.ShapeDtypeStruct((), jnp.int32)},
+    }
+    s_shard = {
+        "params": p_shard,
+        "opt": {"m": p_shard, "v": p_shard,
+                "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())},
+    }
+    abatch = train_batch_specs(arch, shape)
+    b_shard = {
+        k: rules.sharding_for(("batch",) + (None,) * (v.ndim - 1), v.shape, mesh)
+        for k, v in abatch.items()
+    }
+    fn = jax.jit(step, in_shardings=(s_shard, b_shard), out_shardings=(s_shard, None))
+    return fn, (astate, abatch)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=int, default=6)
+    ap.add_argument("--arch", default="yi-34b")
+    args = ap.parse_args()
+
+    space = SearchSpace(
+        [
+            Param.choice("remat", ("none", "dots", "full")),
+            Param.choice("accum", (1, 2, 4)),
+            Param.choice("seq_parallel", (False, True)),
+            Param.choice("head_dim_tp", (False, True)),
+        ]
+    )
+
+    def measure(cfg):
+        t0 = time.time()
+        s = step_time_model(args.arch, "train_4k", cfg)
+        print(f"  cfg={cfg} -> modelled step {s:.2f}s  (compile {time.time()-t0:.0f}s)")
+        return s
+
+    m = CachedMeasurement(CallableMeasurement(measure))
+    r = make_searcher("bo_tpe", space, seed=0).run(m, args.budget)
+    print(f"\nbest distributed config for {args.arch} train_4k: {r.best_config}")
+    print(f"modelled step time {r.best_value:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""repro.core — the paper's contribution: sample-size-aware empirical
+autotuning with RS / RF / GA / BO-GP / BO-TPE searchers and the
+MWU + CLES statistics layer."""
+
+from .space import Config, Param, SearchSpace, paper_space
+from .measurement import (
+    BaseMeasurement,
+    CachedMeasurement,
+    CallableMeasurement,
+    TimingMeasurement,
+)
+from .experiment import ExperimentDesign
+from .dataset import SampleDataset
+from .runner import CellResult, MatrixResults, MatrixRunner
+from .searchers import (
+    EXTRA_ALGORITHMS,
+    PAPER_ALGORITHMS,
+    SEARCHERS,
+    Searcher,
+    TuningResult,
+    make_searcher,
+)
+from . import stats
+
+__all__ = [
+    "Config",
+    "Param",
+    "SearchSpace",
+    "paper_space",
+    "BaseMeasurement",
+    "CachedMeasurement",
+    "CallableMeasurement",
+    "TimingMeasurement",
+    "ExperimentDesign",
+    "SampleDataset",
+    "CellResult",
+    "MatrixResults",
+    "MatrixRunner",
+    "SEARCHERS",
+    "PAPER_ALGORITHMS",
+    "EXTRA_ALGORITHMS",
+    "Searcher",
+    "TuningResult",
+    "make_searcher",
+    "stats",
+]

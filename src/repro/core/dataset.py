@@ -1,0 +1,62 @@
+"""Pre-generated sample datasets (paper section VI.B).
+
+'For our non-SMBO approaches, we streamline the experimental sample
+collection process by creating a dataset of 20 000 samples in one go for each
+architecture and benchmark. We can then subdivide the samples for each sample
+size and experiment.'
+
+RS experiments draw disjoint chunks of S samples; RF experiments draw chunks
+of S-10 for training.  Chunking is deterministic given the dataset seed.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .measurement import BaseMeasurement
+from .space import SearchSpace
+
+
+@dataclass
+class SampleDataset:
+    space: SearchSpace
+    indices: np.ndarray   # (n, d) index vectors
+    values: np.ndarray    # (n,) measured runtimes
+
+    @classmethod
+    def generate(
+        cls,
+        space: SearchSpace,
+        measurement: BaseMeasurement,
+        n: int = 20000,
+        seed: int = 0,
+    ) -> "SampleDataset":
+        rng = np.random.default_rng(seed)
+        idx = space.sample_indices(rng, n)
+        vals = measurement.measure_batch(space.decode_batch(idx))
+        return cls(space=space, indices=idx, values=np.asarray(vals, dtype=np.float64))
+
+    def __len__(self) -> int:
+        return len(self.values)
+
+    def chunk(self, experiment: int, size: int) -> tuple[np.ndarray, np.ndarray]:
+        """Disjoint chunk ``experiment`` of ``size`` samples (wraps around if
+        the design over-asks, which the paper's design never does)."""
+        start = (experiment * size) % len(self)
+        stop = start + size
+        if stop <= len(self):
+            sl = slice(start, stop)
+            return self.indices[sl], self.values[sl]
+        first = len(self) - start
+        return (
+            np.concatenate([self.indices[start:], self.indices[: size - first]]),
+            np.concatenate([self.values[start:], self.values[: size - first]]),
+        )
+
+    @property
+    def optimum(self) -> float:
+        """Best runtime observed in the dataset (used as the denominator of
+        'percentage of optimum' alongside search-discovered optima)."""
+        return float(self.values.min())

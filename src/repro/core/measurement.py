@@ -1,0 +1,145 @@
+"""Measurement functions — the objective an autotuner minimizes.
+
+The paper measures kernel wall-clock on GPUs (timer started after H2D copy,
+stopped before D2H).  On this CPU-only container the framework offers three
+backends (DESIGN.md section 2.2):
+
+* :class:`CallableMeasurement` — wraps any ``f(config) -> seconds`` (used for
+  the analytical TPU cost model and for compiled-artifact cost measurements).
+* :class:`TimingMeasurement`  — wall-clock of a real callable (interpret-mode
+  Pallas kernels in the examples).
+* :class:`CachedMeasurement`  — memoizes another measurement (the paper runs a
+  config once during search; re-measuring during search would leak budget).
+
+Every measurement counts how many *samples* it has served, so searchers can
+be budget-audited, and exposes ``measure_final`` which re-runs the winning
+config ``final_repeats`` times (paper: 10) and returns the median.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Protocol, Sequence
+
+import numpy as np
+
+from .space import Config
+
+
+class Measurement(Protocol):
+    def measure(self, config: Config) -> float: ...
+    def measure_batch(self, configs: Sequence[Config]) -> np.ndarray: ...
+    def measure_final(self, config: Config, repeats: int = 10) -> float: ...
+
+
+class BaseMeasurement:
+    """Common bookkeeping: sample counting and final-config repetition."""
+
+    def __init__(self) -> None:
+        self.n_samples = 0
+
+    def _measure_one(self, config: Config) -> float:  # pragma: no cover
+        raise NotImplementedError
+
+    def measure(self, config: Config) -> float:
+        self.n_samples += 1
+        return float(self._measure_one(config))
+
+    def measure_batch(self, configs: Sequence[Config]) -> np.ndarray:
+        return np.array([self.measure(c) for c in configs], dtype=np.float64)
+
+    def measure_final(self, config: Config, repeats: int = 10) -> float:
+        """Re-measure the chosen config ``repeats`` times; return the median.
+
+        Per the paper (section VI.A): 'When the autotuning algorithm has
+        terminated, we test the final sample 10 times to compensate for
+        runtime variance.'  These repeats are NOT counted against the search
+        budget.
+        """
+        vals = [float(self._measure_one(config)) for _ in range(repeats)]
+        return float(np.median(vals))
+
+    def reset(self) -> None:
+        self.n_samples = 0
+
+
+class CallableMeasurement(BaseMeasurement):
+    def __init__(self, fn: Callable[[Config], float],
+                 batch_fn: Callable[[Sequence[Config]], np.ndarray] | None = None):
+        super().__init__()
+        self._fn = fn
+        self._batch_fn = batch_fn
+
+    def _measure_one(self, config: Config) -> float:
+        return self._fn(config)
+
+    def measure_batch(self, configs: Sequence[Config]) -> np.ndarray:
+        if self._batch_fn is None:
+            return super().measure_batch(configs)
+        self.n_samples += len(configs)
+        return np.asarray(self._batch_fn(configs), dtype=np.float64)
+
+
+class TimingMeasurement(BaseMeasurement):
+    """Times ``runner(config)`` with a monotonic clock.
+
+    ``warmup`` calls are executed once per distinct config before timing so
+    compilation/tracing cost is excluded — the analogue of the paper starting
+    the timer only after host->device transfer.
+    """
+
+    def __init__(self, runner: Callable[[Config], None], warmup: int = 1):
+        super().__init__()
+        self._runner = runner
+        self._warmup = warmup
+        self._warmed: set = set()
+
+    def _key(self, config: Config):
+        return tuple(sorted(config.items()))
+
+    def _measure_one(self, config: Config) -> float:
+        k = self._key(config)
+        if k not in self._warmed:
+            for _ in range(self._warmup):
+                self._runner(config)
+            self._warmed.add(k)
+        t0 = time.perf_counter()
+        self._runner(config)
+        return time.perf_counter() - t0
+
+
+class CachedMeasurement(BaseMeasurement):
+    """Memoizes an inner measurement by config.
+
+    During search the paper evaluates each configuration once ('We only run
+    the sample once during the training and sampling process').  Searchers
+    that revisit a config (GA elites, SA plateaus) therefore see the *same*
+    noisy observation rather than a fresh draw, and the revisit does not
+    consume extra budget.
+    """
+
+    def __init__(self, inner: BaseMeasurement):
+        super().__init__()
+        self._inner = inner
+        self._cache: dict = {}
+
+    def _key(self, config: Config):
+        return tuple(sorted(config.items()))
+
+    def measure(self, config: Config) -> float:
+        k = self._key(config)
+        if k not in self._cache:
+            self._cache[k] = self._inner.measure(config)
+            self.n_samples += 1
+        return self._cache[k]
+
+    def _measure_one(self, config: Config) -> float:
+        return self._inner._measure_one(config)
+
+    def measure_final(self, config: Config, repeats: int = 10) -> float:
+        return self._inner.measure_final(config, repeats)
+
+    def reset(self) -> None:
+        super().reset()
+        self._cache.clear()
+        self._inner.reset()

@@ -1,0 +1,210 @@
+"""Matrix runner: algorithms x sample sizes x experiments (paper section V-VI).
+
+Responsibilities:
+  * run E independent experiments per (algorithm, sample size) cell with
+    independent seeds / noise streams,
+  * serve the non-SMBO methods (RS, RF-training) from the 20k pre-generated
+    :class:`SampleDataset` exactly as the paper does,
+  * re-measure every experiment's winning config ``final_repeats`` (10) times
+    and record the median as the experiment result,
+  * persist results as .npz + JSON for the statistics/figure layer.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import zlib
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+def stable_seed(*parts) -> int:
+    """Deterministic 31-bit seed from arbitrary parts (python's ``hash`` is
+    process-salted and would break run-to-run reproducibility)."""
+    return zlib.crc32("|".join(map(str, parts)).encode()) & 0x7FFFFFFF
+
+from .dataset import SampleDataset
+from .experiment import ExperimentDesign
+from .measurement import BaseMeasurement
+from .searchers import SEARCHERS, make_searcher
+from .searchers.base import TuningResult
+from .space import SearchSpace
+from .surrogates.forest_batched import BatchedForest
+
+
+@dataclass
+class CellResult:
+    """All experiments of one (algorithm, sample_size) cell."""
+
+    algo: str
+    sample_size: int
+    final_values: np.ndarray          # (E,) median-of-10 runtimes
+    search_best_values: np.ndarray    # (E,) best value observed during search
+    n_samples_used: np.ndarray        # (E,) budget audit
+
+
+@dataclass
+class MatrixResults:
+    cells: dict = field(default_factory=dict)  # (algo, S) -> CellResult
+    optimum: float = np.inf
+
+    def add(self, cell: CellResult) -> None:
+        self.cells[(cell.algo, cell.sample_size)] = cell
+        self.optimum = min(self.optimum, float(cell.final_values.min(initial=np.inf)))
+
+    def finals(self, algo: str, sample_size: int) -> np.ndarray:
+        return self.cells[(algo, sample_size)].final_values
+
+    def algorithms(self) -> list[str]:
+        return sorted({a for a, _ in self.cells})
+
+    def sample_sizes(self) -> list[int]:
+        return sorted({s for _, s in self.cells})
+
+    # -- persistence --------------------------------------------------------
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        arrays, meta = {}, []
+        for i, ((algo, s), cell) in enumerate(sorted(self.cells.items())):
+            arrays[f"final_{i}"] = cell.final_values
+            arrays[f"search_{i}"] = cell.search_best_values
+            arrays[f"nsamp_{i}"] = cell.n_samples_used
+            meta.append({"algo": algo, "sample_size": s, "index": i})
+        np.savez_compressed(path, meta=json.dumps({"cells": meta, "optimum": self.optimum}), **arrays)
+
+    @classmethod
+    def load(cls, path: str) -> "MatrixResults":
+        data = np.load(path, allow_pickle=False)
+        meta = json.loads(str(data["meta"]))
+        out = cls(optimum=meta["optimum"])
+        for m in meta["cells"]:
+            i = m["index"]
+            out.cells[(m["algo"], m["sample_size"])] = CellResult(
+                algo=m["algo"],
+                sample_size=m["sample_size"],
+                final_values=data[f"final_{i}"],
+                search_best_values=data[f"search_{i}"],
+                n_samples_used=data[f"nsamp_{i}"],
+            )
+        return out
+
+
+class MatrixRunner:
+    def __init__(
+        self,
+        space: SearchSpace,
+        measurement_factory,           # (seed: int) -> BaseMeasurement
+        design: ExperimentDesign,
+        dataset: SampleDataset | None = None,
+        algorithms: tuple[str, ...] = ("rs", "rf", "ga", "bo_gp", "bo_tpe"),
+        seed: int = 0,
+        verbose: bool = False,
+    ):
+        unknown = [a for a in algorithms if a not in SEARCHERS]
+        if unknown:
+            raise KeyError(f"unknown algorithms {unknown}")
+        self.space = space
+        self.measurement_factory = measurement_factory
+        self.design = design
+        self.dataset = dataset
+        self.algorithms = algorithms
+        self.seed = seed
+        self.verbose = verbose
+
+    # -- dataset-served paths (paper section VI.B) ---------------------------
+    def _rs_from_dataset(self, experiment: int, budget: int) -> TuningResult:
+        idx, vals = self.dataset.chunk(experiment, budget)
+        j = int(np.argmin(vals))
+        return TuningResult(
+            algo="rs",
+            best_config=self.space.decode(idx[j]),
+            best_value=float(vals[j]),
+            history_values=list(vals),
+            history_configs=[],
+            n_samples=budget,
+        )
+
+    def _rf_cell_batched(
+        self, sample_size: int, n_exp: int, rf_pool: int = 2048
+    ) -> list[TuningResult]:
+        """All RF experiments of one sample-size cell, fit in ONE vectorized
+        histogram-forest pass (see surrogates/forest_batched.py).  Semantics
+        per experiment match the paper: train on a disjoint S-10 dataset
+        chunk, measure the model's top-10 predictions over a candidate pool,
+        keep the best prediction."""
+        top_k = min(10, max(1, sample_size // 2))
+        n_train = sample_size - top_k
+        chunks = [self.dataset.chunk(e, n_train) for e in range(n_exp)]
+        Xc = np.stack([c[0] for c in chunks])
+        yc = np.stack([c[1] for c in chunks])
+        forest = BatchedForest(
+            self.space.cardinalities, n_estimators=100, seed=self.seed
+        )
+        forest.fit(Xc, yc)
+        pool_rng = np.random.default_rng(self.seed + 7)
+        pool = self.space.sample_indices(pool_rng, rf_pool)
+        preds = forest.predict(pool)                    # (E, P)
+        results = []
+        for e in range(n_exp):
+            exp_seed = stable_seed(self.seed, "rf", sample_size, e)
+            measurement = self.measurement_factory(exp_seed)
+            best = np.argsort(preds[e], kind="stable")[:top_k]
+            run_vals = measurement.measure_batch(self.space.decode_batch(pool[best]))
+            j = int(np.argmin(run_vals))
+            results.append(
+                TuningResult(
+                    algo="rf",
+                    best_config=self.space.decode(pool[best][j]),
+                    best_value=float(run_vals[j]),
+                    history_values=list(yc[e]) + list(run_vals),
+                    history_configs=[],
+                    n_samples=sample_size,
+                )
+            )
+        return results
+
+    # -- main loop ------------------------------------------------------------
+    def run(self) -> MatrixResults:
+        results = MatrixResults()
+        for algo in self.algorithms:
+            for sample_size, n_exp in self.design.rows():
+                finals = np.empty(n_exp)
+                search_best = np.empty(n_exp)
+                n_used = np.empty(n_exp, dtype=np.int64)
+                rf_batch = (
+                    self._rf_cell_batched(sample_size, n_exp)
+                    if (self.dataset is not None and algo == "rf")
+                    else None
+                )
+                for e in range(n_exp):
+                    exp_seed = stable_seed(self.seed, algo, sample_size, e)
+                    measurement = self.measurement_factory(exp_seed)
+                    if rf_batch is not None:
+                        tr = rf_batch[e]
+                    elif self.dataset is not None and algo == "rs":
+                        tr = self._rs_from_dataset(e, sample_size)
+                    else:
+                        searcher = make_searcher(algo, self.space, seed=exp_seed)
+                        tr = searcher.run(measurement, sample_size)
+                    finals[e] = measurement.measure_final(
+                        tr.best_config, self.design.final_repeats
+                    )
+                    search_best[e] = tr.best_value
+                    n_used[e] = tr.n_samples
+                results.add(
+                    CellResult(
+                        algo=algo,
+                        sample_size=sample_size,
+                        final_values=finals,
+                        search_best_values=search_best,
+                        n_samples_used=n_used,
+                    )
+                )
+                if self.verbose:
+                    print(
+                        f"[runner] {algo:7s} S={sample_size:4d} E={n_exp:4d} "
+                        f"median={np.median(finals):.6g} best={finals.min():.6g}"
+                    )
+        return results

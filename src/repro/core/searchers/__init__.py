@@ -1,0 +1,30 @@
+from .base import SEARCHERS, Searcher, TuningResult, make_searcher, register
+from .random_search import RandomSearch
+from .random_forest import RandomForestSearcher
+from .genetic import GeneticAlgorithm
+from .bo_gp import BOGPSearcher
+from .bo_tpe import BOTPESearcher
+from .annealing import SimulatedAnnealing
+from .pso import ParticleSwarm
+from .grid import GridSearch
+
+PAPER_ALGORITHMS = ("rs", "rf", "ga", "bo_gp", "bo_tpe")
+EXTRA_ALGORITHMS = ("sa", "pso", "grid")
+
+__all__ = [
+    "SEARCHERS",
+    "Searcher",
+    "TuningResult",
+    "make_searcher",
+    "register",
+    "RandomSearch",
+    "RandomForestSearcher",
+    "GeneticAlgorithm",
+    "BOGPSearcher",
+    "BOTPESearcher",
+    "SimulatedAnnealing",
+    "ParticleSwarm",
+    "GridSearch",
+    "PAPER_ALGORITHMS",
+    "EXTRA_ALGORITHMS",
+]

@@ -1,0 +1,102 @@
+"""Searcher interface + registry.
+
+A searcher minimizes a (noisy) measurement over a :class:`SearchSpace` with a
+fixed *sample budget* — the paper's central experimental axis.  ``run``
+returns a :class:`TuningResult` containing the best configuration the
+searcher chose, the value observed for it during the search, and the full
+sample history (used by the statistics layer and the benchmark figures).
+"""
+
+from __future__ import annotations
+
+from abc import ABC, abstractmethod
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..measurement import BaseMeasurement
+from ..space import Config, SearchSpace
+
+
+@dataclass
+class TuningResult:
+    algo: str
+    best_config: Config
+    best_value: float               # value observed during search
+    final_value: float | None = None  # median of 10 re-measurements (runner fills)
+    history_configs: list = field(default_factory=list)
+    history_values: list = field(default_factory=list)
+    n_samples: int = 0
+
+    def trajectory(self) -> np.ndarray:
+        """Best-so-far curve over the sample history."""
+        return np.minimum.accumulate(np.asarray(self.history_values, dtype=np.float64))
+
+
+class Searcher(ABC):
+    """Budgeted minimizer.  Subclasses set ``name`` and implement ``_search``."""
+
+    name: str = "base"
+    #: whether this searcher receives the constrained space (paper: SMBO
+    #: methods could not use constraint specification).
+    uses_constraints: bool = True
+
+    def __init__(self, space: SearchSpace, seed: int = 0, **kwargs):
+        self.space = space if self.uses_constraints else space.unconstrained()
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+
+    def run(self, measurement: BaseMeasurement, budget: int) -> TuningResult:
+        if budget < 1:
+            raise ValueError("budget must be >= 1")
+        result = TuningResult(algo=self.name, best_config={}, best_value=np.inf)
+        self._search(measurement, budget, result)
+        result.n_samples = len(result.history_values)
+        if result.n_samples > budget:
+            raise RuntimeError(
+                f"{self.name} exceeded budget: {result.n_samples} > {budget}"
+            )
+        return result
+
+    # -- helpers for subclasses ----------------------------------------------
+    def _observe(
+        self, measurement: BaseMeasurement, config: Config, result: TuningResult
+    ) -> float:
+        v = measurement.measure(config)
+        result.history_configs.append(config)
+        result.history_values.append(v)
+        if v < result.best_value:
+            result.best_value = v
+            result.best_config = config
+        return v
+
+    def _observe_batch(
+        self, measurement: BaseMeasurement, configs: list[Config], result: TuningResult
+    ) -> np.ndarray:
+        vals = measurement.measure_batch(configs)
+        for c, v in zip(configs, vals):
+            result.history_configs.append(c)
+            result.history_values.append(float(v))
+            if v < result.best_value:
+                result.best_value = float(v)
+                result.best_config = c
+        return vals
+
+    @abstractmethod
+    def _search(
+        self, measurement: BaseMeasurement, budget: int, result: TuningResult
+    ) -> None: ...
+
+
+SEARCHERS: dict[str, type[Searcher]] = {}
+
+
+def register(cls: type[Searcher]) -> type[Searcher]:
+    SEARCHERS[cls.name] = cls
+    return cls
+
+
+def make_searcher(name: str, space: SearchSpace, seed: int = 0, **kw) -> Searcher:
+    if name not in SEARCHERS:
+        raise KeyError(f"unknown searcher {name!r}; have {sorted(SEARCHERS)}")
+    return SEARCHERS[name](space, seed=seed, **kw)

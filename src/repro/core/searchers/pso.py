@@ -1,0 +1,64 @@
+"""Particle Swarm Optimization — beyond-paper searcher (CLTune related work).
+
+Particles live in the continuous unit cube and are decoded to index vectors
+for measurement (standard discrete-PSO relaxation).  Velocity update with
+inertia w, cognitive c1, social c2 (Kernel-Tuner-like defaults)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..measurement import BaseMeasurement
+from .base import Searcher, TuningResult, register
+
+
+@register
+class ParticleSwarm(Searcher):
+    name = "pso"
+    uses_constraints = True
+
+    def __init__(
+        self,
+        space,
+        seed: int = 0,
+        n_particles: int = 16,
+        w: float = 0.7,
+        c1: float = 1.6,
+        c2: float = 1.6,
+    ):
+        super().__init__(space, seed)
+        self.n_particles = n_particles
+        self.w, self.c1, self.c2 = w, c1, c2
+
+    def _search(self, measurement: BaseMeasurement, budget: int, result: TuningResult):
+        n_p = min(self.n_particles, budget)
+        d = self.space.n_params
+        pos = self.space.to_unit(self.space.sample_indices(self.rng, n_p))
+        vel = self.rng.uniform(-0.1, 0.1, size=(n_p, d))
+
+        def measure_pos(p: np.ndarray) -> float:
+            cfg = self.space.decode(self.space.from_unit(p))
+            return self._observe(measurement, cfg, result)
+
+        pbest, pbest_v = pos.copy(), np.array([measure_pos(p) for p in pos])
+        g = int(np.argmin(pbest_v))
+        gbest, gbest_v = pbest[g].copy(), pbest_v[g]
+        remaining = budget - n_p
+
+        while remaining > 0:
+            for i in range(n_p):
+                if remaining <= 0:
+                    break
+                r1, r2 = self.rng.random(d), self.rng.random(d)
+                vel[i] = (
+                    self.w * vel[i]
+                    + self.c1 * r1 * (pbest[i] - pos[i])
+                    + self.c2 * r2 * (gbest - pos[i])
+                )
+                pos[i] = np.clip(pos[i] + vel[i], 0.0, 1.0)
+                v = measure_pos(pos[i])
+                remaining -= 1
+                if v < pbest_v[i]:
+                    pbest[i], pbest_v[i] = pos[i].copy(), v
+                    if v < gbest_v:
+                        gbest, gbest_v = pos[i].copy(), v

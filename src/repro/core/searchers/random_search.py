@@ -1,0 +1,23 @@
+"""Random Search — the paper's baseline.
+
+'For the case of Random Search (RS), we simply select the minimum runtime
+from the collection of S samples for the given experiment.' (section VI.B)
+
+RS samples the *constrained* space (constraint specification is available to
+non-SMBO methods).
+"""
+
+from __future__ import annotations
+
+from ..measurement import BaseMeasurement
+from .base import Searcher, TuningResult, register
+
+
+@register
+class RandomSearch(Searcher):
+    name = "rs"
+    uses_constraints = True
+
+    def _search(self, measurement: BaseMeasurement, budget: int, result: TuningResult):
+        configs = self.space.sample_batch(self.rng, budget)
+        self._observe_batch(measurement, configs, result)

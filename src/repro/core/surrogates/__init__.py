@@ -1,0 +1,4 @@
+from .forest import RandomForestRegressor, RegressionTree
+from .gp import GaussianProcess
+
+__all__ = ["RandomForestRegressor", "RegressionTree", "GaussianProcess"]

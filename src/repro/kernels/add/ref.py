@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the Add benchmark (paper section V.D: 'a simple
+vector addition with two vectors of size X' — ImageCL treats them as 2-D
+images, as do we)."""
+
+import jax.numpy as jnp
+
+
+def add_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return a + b

@@ -1,0 +1,78 @@
+"""Shared helpers for the tunable Pallas TPU kernels.
+
+Kernel geometry mirrors the cost model (repro.costmodel.kernel_cost):
+
+    bm = 8 * t_x          block rows
+    bn = 128 * t_y        block cols
+    t_z                   row coarsening (row-tiles per grid step)
+    w_x, w_y              region splits (grid decomposition)
+    w_z                   pipeline depth — on real TPU the Pallas/Mosaic
+                          pipeliner owns buffer counts, so w_z only enters
+                          the cost model (documented in DESIGN.md 2.1)
+
+Region splits use *clamped block indices*: the grid is
+(w_x * steps_r, w_y * steps_c) where steps cover ceil-divided padded
+regions; indices past the edge clamp to the last block, which makes the
+duplicated writes idempotent and keeps every (config x shape) combination
+legal — matching the cost model's padding-waste semantics.
+
+On CPU (this container) kernels run with ``interpret=True``; on a real TPU
+backend the same pallas_call lowers to Mosaic.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from math import ceil
+
+import jax
+
+Config = dict
+
+
+@dataclass(frozen=True)
+class KernelGeometry:
+    bm: int
+    bn: int
+    tz: int
+    wx: int
+    wy: int
+    wz: int
+
+    @property
+    def rows_step(self) -> int:
+        return self.bm * self.tz
+
+
+def geometry_from_config(cfg: Config) -> KernelGeometry:
+    return KernelGeometry(
+        bm=8 * cfg.get("t_x", 1),
+        bn=128 * cfg.get("t_y", 1),
+        tz=cfg.get("t_z", 1),
+        wx=cfg.get("w_x", 1),
+        wy=cfg.get("w_y", 1),
+        wz=cfg.get("w_z", 1),
+    )
+
+
+def split_grid(extent: int, block: int, splits: int) -> tuple[int, int]:
+    """(steps_per_region, n_blocks_total) for a clamped region split."""
+    region = ceil(extent / splits)
+    steps = ceil(region / block)
+    n_blocks = ceil(extent / block)
+    return steps, n_blocks
+
+
+def clamped_index(region: int, local: int, steps: int, n_blocks: int) -> int:
+    """Block index for (region, local step), clamped to the last real block.
+
+    Written with jnp maximum/minimum so it traces inside index_maps.
+    """
+    import jax.numpy as jnp
+
+    return jnp.minimum(region * steps + local, n_blocks - 1)
+
+
+def use_interpret() -> bool:
+    """Pallas interpret mode on CPU; compiled Mosaic on TPU."""
+    return jax.default_backend() != "tpu"

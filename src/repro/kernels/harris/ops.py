@@ -1,0 +1,42 @@
+"""Jitted public wrapper for the tunable Harris kernel.
+
+Pads rows to a multiple of the band height (zero padding — identical to the
+oracle's boundary condition as long as the pad is >= the stencil radius,
+which rows_step >= 8 always satisfies) and crops the result.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..common import Config, geometry_from_config
+from .kernel import harris_pallas
+
+
+@partial(jax.jit, static_argnames=("t_x", "t_y", "t_z", "w_x", "w_y", "w_z"))
+def _harris(img, *, t_x=1, t_y=1, t_z=1, w_x=1, w_y=1, w_z=1):
+    g = geometry_from_config(
+        dict(t_x=t_x, t_y=t_y, t_z=t_z, w_x=w_x, w_y=w_y, w_z=w_z)
+    )
+    x, y = img.shape
+    rows = g.rows_step
+    x_pad = (-x) % rows
+    padded = jnp.pad(img, ((0, x_pad), (0, 0)))
+    out = harris_pallas(padded, g)
+    return out[:x]
+
+
+def harris(img: jnp.ndarray, config: Config | None = None) -> jnp.ndarray:
+    cfg = config or {}
+    return _harris(
+        img,
+        t_x=cfg.get("t_x", 1),
+        t_y=cfg.get("t_y", 1),
+        t_z=cfg.get("t_z", 1),
+        w_x=cfg.get("w_x", 1),
+        w_y=cfg.get("w_y", 1),
+        w_z=cfg.get("w_z", 1),
+    )

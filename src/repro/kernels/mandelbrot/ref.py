@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the Mandelbrot benchmark (paper section V.D):
+escape-iteration counts over the classic view window, vectorized over the
+whole image with a fixed-trip-count loop (SIMD semantics — no early exit,
+matching how both a GPU warp and the TPU VPU execute it)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+VIEW = (-2.5, 1.0, -1.25, 1.25)  # xmin, xmax, ymin, ymax
+MAX_ITER = 64
+
+
+def mandelbrot_ref(
+    x: int, y: int, max_iter: int = MAX_ITER, view=VIEW, dtype=jnp.float32
+) -> jnp.ndarray:
+    xmin, xmax, ymin, ymax = view
+    re = xmin + (jnp.arange(y, dtype=dtype) + 0.5) * ((xmax - xmin) / y)
+    im = ymin + (jnp.arange(x, dtype=dtype) + 0.5) * ((ymax - ymin) / x)
+    cre = jnp.broadcast_to(re[None, :], (x, y))
+    cim = jnp.broadcast_to(im[:, None], (x, y))
+
+    def body(_, state):
+        zr, zi, count = state
+        alive = zr * zr + zi * zi < 4.0
+        zr2 = zr * zr - zi * zi + cre
+        zi2 = 2.0 * zr * zi + cim
+        zr = jnp.where(alive, zr2, zr)
+        zi = jnp.where(alive, zi2, zi)
+        count = count + alive.astype(dtype)
+        return zr, zi, count
+
+    zr = jnp.zeros((x, y), dtype)
+    zi = jnp.zeros((x, y), dtype)
+    count = jnp.zeros((x, y), dtype)
+    _, _, count = jax.lax.fori_loop(0, max_iter, body, (zr, zi, count))
+    return count

@@ -1,0 +1,207 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the jitted step (train_step for train shapes,
+prefill/decode for serving shapes) with in/out shardings derived from the
+logical-axis rules, runs ``.lower(...)`` on ShapeDtypeStructs (no
+allocation), ``.compile()``s it, and records:
+
+  * memory_analysis()      — per-device bytes (proves it fits),
+  * cost_analysis()        — HLO FLOPs / bytes accessed,
+  * collective bytes       — parsed from the post-SPMD optimized HLO
+                             (all-gather / all-reduce / reduce-scatter /
+                              all-to-all / collective-permute operand sizes),
+
+into results/dryrun/<arch>_<shape>_<mesh>.json for EXPERIMENTS.md and the
+roofline layer (launch/roofline.py).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                     # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh single       # one mesh
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import REGISTRY, SHAPES, applicable_shapes
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import decode_specs, prefill_batch_specs, train_batch_specs
+from repro.models import abstract_params, build_model, param_axes, param_count
+from repro.launch.hlo_analysis import collective_stats, dot_flops
+from repro.sharding.rules import ShardingRules
+from repro.train.step import TrainSettings, make_decode_step, make_prefill_step, make_train_step
+
+RESULTS_DIR = os.path.join("results", "dryrun")
+
+
+
+def build_step(arch: ArchConfig, shape: ShapeCfg, mesh, rules: ShardingRules,
+               settings: TrainSettings | None = None):
+    """Returns (jitted_fn, abstract_args tuple)."""
+    data_shards = int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                               if a in mesh.axis_names]))
+    moe_groups = data_shards if shape.global_batch % data_shards == 0 else 1
+    model = build_model(arch, moe_groups=moe_groups)
+    spec = model.spec()
+    aparams = abstract_params(spec)
+    axes = param_axes(spec)
+    p_shard = rules.tree_shardings(axes, aparams, mesh)
+
+    def bshard(v):  # batch-leading arrays, divisibility-aware (B=1 long_500k)
+        return rules.sharding_for(
+            ("batch",) + (None,) * (v.ndim - 1), v.shape, mesh
+        )
+
+    if shape.kind == "train":
+        settings = settings or TrainSettings(remat="dots", accum=1)
+        step = make_train_step(model, settings, grad_shardings=p_shard)
+        astate = {
+            "params": aparams,
+            "opt": {
+                "m": jax.tree_util.tree_map(
+                    lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32), aparams),
+                "v": jax.tree_util.tree_map(
+                    lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32), aparams),
+                "step": jax.ShapeDtypeStruct((), jnp.int32),
+            },
+        }
+        s_shard = {
+            "params": p_shard,
+            "opt": {
+                "m": p_shard,
+                "v": p_shard,
+                "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+            },
+        }
+        abatch = train_batch_specs(arch, shape)
+        b_shard = {k: bshard(v) for k, v in abatch.items()}
+        fn = jax.jit(step, in_shardings=(s_shard, b_shard),
+                     out_shardings=(s_shard, None))
+        return fn, (astate, abatch)
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(model)
+        abatch = prefill_batch_specs(arch, shape)
+        b_shard = {k: bshard(v) for k, v in abatch.items()}
+        fn = jax.jit(step, in_shardings=(p_shard, b_shard), out_shardings=None)
+        return fn, (aparams, abatch)
+
+    # decode
+    step = make_decode_step(model)
+    dspecs = decode_specs(arch, shape, model)
+    c_axes = model.cache_axes()
+    c_shard = rules.tree_shardings(c_axes, dspecs["cache"], mesh)
+    len_shard = bshard(dspecs["cache_len"])
+    tok_shard = bshard(dspecs["tokens"])
+    fn = jax.jit(step, in_shardings=(p_shard, c_shard, len_shard, tok_shard),
+                 out_shardings=(None, c_shard))
+    return fn, (aparams, dspecs["cache"], dspecs["cache_len"], dspecs["tokens"])
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             rules: ShardingRules | None = None, save: bool = True,
+             settings: TrainSettings | None = None) -> dict:
+    arch = REGISTRY[arch_name]
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules or ShardingRules()
+    mesh_name = "multipod" if multi_pod else "single"
+    t0 = time.time()
+    with mesh:
+        fn, args = build_step(arch, shape, mesh, rules, settings=settings)
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+    dots = dot_flops(hlo)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    record = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "n_devices": n_dev,
+        "params": param_count(build_model(arch).spec()),
+        "flops_total": float(cost.get("flops", 0.0)),
+        "flops_dot_corrected": dots["flops"],
+        "flops_dot_uncorrected": dots["flops_uncorrected"],
+        "bytes_total": float(cost.get("bytes accessed", 0.0)),
+        "collectives": coll,
+        "memory": {
+            # argument/output/peak are PER-DEVICE on this backend;
+            # temp_size is module-global (divide by n_devices)
+            "argument_bytes_per_dev": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes_per_dev": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes_module": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes_per_dev": getattr(mem, "peak_memory_in_bytes", 0),
+        },
+        "wall_s": time.time() - t0,
+    }
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        path = os.path.join(RESULTS_DIR, f"{arch_name}_{shape_name}_{mesh_name}.json")
+        with open(path, "w") as f:
+            json.dump(record, f, indent=2)
+    print(f"[dryrun] {arch_name:20s} {shape_name:12s} {mesh_name:8s} "
+          f"flops={record['flops_total']:.3e} bytes={record['bytes_total']:.3e} "
+          f"coll={coll['total_bytes']:.3e} "
+          f"peak/dev={record['memory']['peak_bytes_per_dev']/2**30:.2f}GiB "
+          f"args/dev={record['memory']['argument_bytes_per_dev']/2**30:.2f}GiB "
+          f"({record['wall_s']:.0f}s)")
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multipod", "both"), default="both")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(REGISTRY)
+    meshes = {"single": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    failures = []
+    for arch_name in archs:
+        shapes = (
+            [args.shape] if args.shape else applicable_shapes(REGISTRY[arch_name])
+        )
+        for shape_name in shapes:
+            for mp in meshes:
+                mesh_name = "multipod" if mp else "single"
+                path = os.path.join(
+                    RESULTS_DIR, f"{arch_name}_{shape_name}_{mesh_name}.json"
+                )
+                if os.path.exists(path) and not args.force:
+                    print(f"[dryrun] skip existing {path}")
+                    continue
+                try:
+                    run_cell(arch_name, shape_name, mp)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    failures.append((arch_name, shape_name, mesh_name, repr(e)))
+                    print(f"[dryrun] FAIL {arch_name} {shape_name} {mesh_name}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n[dryrun] {len(failures)} FAILURES:")
+        for f in failures:
+            print("   ", *f[:3], f[3][:200])
+        raise SystemExit(1)
+    print("\n[dryrun] ALL CELLS PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,215 @@
+"""Post-SPMD HLO analysis: loop-aware collective accounting.
+
+XLA's HloCostAnalysis (and a naive text scan) counts each computation ONCE
+— but lax.scan lowers to a `while` whose body executes trip-count times, so
+per-layer collectives (the FSDP all-gathers, TP reduce-scatters, MoE
+all-to-alls) would be undercounted by a factor of n_layers.  This module
+parses the optimized HLO text into its computations, recovers the while
+call graph with trip counts (from the loop-condition `constant(N)`), and
+multiplies each computation's collective bytes by the product of trip
+counts on its call chain.
+
+Shapes in the post-SPMD module are per-participant, so totals are
+per-device bytes (global = per-device x n_devices).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(
+    r"\b(f64|s64|u64|f32|s32|u32|bf16|f16|s8|u8|pred|f8e4m3fn|f8e5m2)\[([0-9,]*)\]"
+)
+_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_COMP_START = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)")
+_WHILE_RE = re.compile(r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s(?:32|64)\[\]\s+constant\((\d+)\)")
+_CALL_RE = re.compile(r"(?:call|fusion)\(.*?\).*?(?:to_apply|calls)=%?([\w.\-]+)")
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: list = field(default_factory=list)
+    entry: bool = False
+
+
+def parse_computations(hlo_text: str) -> dict[str, Computation]:
+    """Computation headers are column-0 lines `[ENTRY] %name (...) ... {`;
+    bodies are indented; a computation ends at a bare `}` line.  (Brace
+    *counting* is unusable: HLO layouts `{1,0}` and metadata={...} put
+    braces on instruction lines.)"""
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo_text.splitlines():
+        if cur is None:
+            if raw and not raw[0].isspace() and raw.rstrip().endswith("{"):
+                m = _COMP_START.match(raw)
+                if m:
+                    cur = Computation(m.group(2), entry=bool(m.group(1)))
+            continue
+        if raw.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        cur.lines.append(raw.strip())
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    consts = [int(c) for line in cond.lines for c in _CONST_RE.findall(line)]
+    return max(consts) if consts else 1
+
+
+def computation_multipliers(comps: dict[str, Computation]) -> dict[str, float]:
+    """Execution-count multiplier per computation (product of enclosing
+    while trip counts), via DFS from the entry computation."""
+    entry = next((c for c in comps.values() if c.entry), None)
+    if entry is None:
+        return {name: 1.0 for name in comps}
+    mult: dict[str, float] = {}
+
+    def visit(name: str, m: float) -> None:
+        if name not in comps:
+            return
+        mult[name] = max(mult.get(name, 0.0), m)
+        for line in comps[name].lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond_name, body_name = wm.group(1), wm.group(2)
+                trips = _trip_count(comps.get(cond_name, Computation(cond_name)))
+                visit(cond_name, m * (trips + 1))
+                visit(body_name, m * trips)
+                continue
+            cm = _CALL_RE.search(line)
+            if cm:
+                visit(cm.group(1), m)
+
+    visit(entry.name, 1.0)
+    # computations never reached (dead or referenced by fusions only): x1
+    for name in comps:
+        mult.setdefault(name, 1.0)
+    return mult
+
+
+_DOT_RE = re.compile(
+    r"(\S+)\s+dot\(\s*%?([\w.\-]+)(?:\.clone)?\s*,\s*%?([\w.\-]+)"
+)
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|\S+)\s+[\w\-]+")
+
+
+def _first_shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+def dot_flops(hlo_text: str) -> dict:
+    """Loop-corrected FLOPs of every `dot` op (text-level, per-device).
+
+    flops(dot) = 2 * prod(output dims) * prod(lhs contracting dim sizes) —
+    the standard matmul count; XLA's HloCostAnalysis uses the same formula
+    but counts while bodies once (no trip-count scaling), which undercounts
+    scan-over-layers models by ~n_layers x.  Elementwise/reduce flops are
+    excluded (an order of magnitude below the dots for these models)."""
+    comps = parse_computations(hlo_text)
+    mult = computation_multipliers(comps)
+    total = 0.0
+    raw = 0.0
+    for comp in comps.values():
+        m = mult.get(comp.name, 1.0)
+        shapes: dict[str, str] = {}
+        for s in comp.lines:
+            dm = _DEF_RE.match(s)
+            if dm:
+                shapes[dm.group(1)] = dm.group(2)
+        for s in comp.lines:
+            if " dot(" not in s:
+                continue
+            body = s[5:] if s.startswith("ROOT ") else s
+            if " = " not in body:
+                continue
+            name, rhs = body.split(" = ", 1)
+            om = re.match(r"(\(.*?\)|\S+)\s+dot\(\s*%?([\w.\-]+)\s*,", rhs)
+            if not om:
+                continue
+            out_shape, lhs_name = om.groups()
+            out_elems = 1
+            for d in _first_shape_dims(out_shape):
+                out_elems *= d
+            lhs_dims = _first_shape_dims(shapes.get(lhs_name, ""))
+            cm = _LHS_CONTRACT_RE.search(s)
+            contract = 1
+            if cm and cm.group(1) and lhs_dims:
+                for ix in cm.group(1).split(","):
+                    i = int(ix)
+                    if i < len(lhs_dims):
+                        contract *= lhs_dims[i]
+            f = 2.0 * out_elems * contract
+            total += f * m
+            raw += f
+    return {"flops": total, "flops_uncorrected": raw}
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Loop-corrected per-device collective bytes + op counts by kind."""
+    comps = parse_computations(hlo_text)
+    mult = computation_multipliers(comps)
+    bytes_by_kind = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0.0 for k in _COLLECTIVES}
+    raw_bytes = {k: 0.0 for k in _COLLECTIVES}
+    for comp in comps.values():
+        m = mult.get(comp.name, 1.0)
+        for s in comp.lines:
+            if s.startswith("ROOT "):
+                s = s[5:]
+            if " = " not in s:
+                continue
+            rhs = s.split(" = ", 1)[1]
+            om = re.match(r"(\(.*?\)|\S+)\s+([\w\-]+)\(", rhs)
+            if not om:
+                continue
+            shape_str, op = om.groups()
+            if op.endswith("-done"):
+                continue
+            base = op[: -len("-start")] if op.endswith("-start") else op
+            if base in _COLLECTIVES:
+                b = shape_bytes(shape_str)
+                bytes_by_kind[base] += b * m
+                raw_bytes[base] += b
+                counts[base] += m
+    return {
+        "bytes": bytes_by_kind,
+        "bytes_uncorrected": raw_bytes,
+        "counts": counts,
+        "total_bytes": sum(bytes_by_kind.values()),
+        "total_bytes_uncorrected": sum(raw_bytes.values()),
+    }

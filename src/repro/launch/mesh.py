@@ -1,0 +1,41 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module never touches jax device state.  Single pod:
+(data=16, model=16) = 256 chips.  Multi-pod: (pod=2, data=16, model=16) =
+512 chips; the "pod" axis only ever carries batch parallelism, so its
+collectives are the per-step gradient all-reduce — the right shape for
+cross-pod DCI links.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "the dry-run entrypoint must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import"
+        )
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def make_host_mesh(model_parallel: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (tests / examples)."""
+    devices = np.asarray(jax.devices())
+    n = len(devices)
+    mp = max(1, min(model_parallel, n))
+    data = n // mp
+    return Mesh(devices[: data * mp].reshape(data, mp), ("data", "model"))

@@ -1,0 +1,64 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+``input_specs`` returns abstract inputs for the step function selected by
+the shape kind (train / prefill / decode); nothing is ever allocated.
+Modality frontends are stubs per the task spec: whisper gets precomputed
+frame embeddings, chameleon gets VQ token ids (ordinary vocab entries).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeCfg
+from ..models import abstract_params, build_model
+from ..models.layers import COMPUTE_DTYPE
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(arch: ArchConfig, shape: ShapeCfg) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if arch.family == "encdec":
+        return {
+            "src_embeds": sds((b, s, arch.d_model), jnp.float32),
+            "dec_tokens": sds((b, arch.encdec.dec_len), jnp.int32),
+            "dec_labels": sds((b, arch.encdec.dec_len), jnp.int32),
+        }
+    return {
+        "tokens": sds((b, s), jnp.int32),
+        "labels": sds((b, s), jnp.int32),
+    }
+
+
+def prefill_batch_specs(arch: ArchConfig, shape: ShapeCfg) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if arch.family == "encdec":
+        return {
+            "src_embeds": sds((b, s, arch.d_model), jnp.float32),
+            "dec_tokens": sds((b, arch.encdec.dec_len), jnp.int32),
+        }
+    return {"tokens": sds((b, s), jnp.int32)}
+
+
+def decode_specs(arch: ArchConfig, shape: ShapeCfg, model) -> dict:
+    """Abstract (cache, cache_len, tokens) for one decode step with a KV
+    cache of shape.seq_len tokens."""
+    b, s = shape.global_batch, shape.seq_len
+    if arch.family == "encdec":
+        enc_out = sds((b, s, arch.d_model), COMPUTE_DTYPE)
+        cache = jax.eval_shape(
+            lambda p, e: model.init_cache(p, e, b),
+            abstract_params(model.spec()),
+            enc_out,
+        )
+    else:
+        cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    return {
+        "cache": cache,
+        "cache_len": sds((b,), jnp.int32),
+        "tokens": sds((b, 1), jnp.int32),
+    }

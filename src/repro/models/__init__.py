@@ -1,0 +1,19 @@
+from .param import P, abstract_params, init_params, param_axes, param_count
+from .registry import build_model
+from .decoder import DecoderLM
+from .encdec import EncDecLM
+from .hybrid import HybridLM
+from .ssm import SSMLM
+
+__all__ = [
+    "P",
+    "abstract_params",
+    "init_params",
+    "param_axes",
+    "param_count",
+    "build_model",
+    "DecoderLM",
+    "EncDecLM",
+    "HybridLM",
+    "SSMLM",
+]

@@ -1,0 +1,275 @@
+"""Decoder-only LM covering the dense / moe / mla_moe / vlm families.
+
+Scan-over-layers: per-layer parameters are stacked on a leading "layers"
+dim and the block is applied with lax.scan, keeping HLO size and compile
+time O(1) in depth (88-layer granite compiles as fast as 16-layer olmoe).
+Remat policy is applied to the scanned block body.
+
+Early-fusion VLM (chameleon) is this same class: its VQ image tokens are
+ordinary vocabulary entries (the tokenizer frontend is a stub per the task
+spec).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import (
+    COMPUTE_DTYPE,
+    apply_rope,
+    attention,
+    embed,
+    lm_logits,
+    rms_norm,
+    swiglu,
+)
+from .mla import MLADims, mla_decode, mla_prefill
+from .moe import MoEDims, moe_forward
+from ..sharding.constrain import (
+    constrain_residual,
+    gather_layer_weights,
+    strip_layer_axis,
+)
+from .param import P, param_axes
+
+REMAT_POLICIES = {
+    "none": None,
+    "dots": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+    "full": jax.checkpoint_policies.nothing_saveable,
+}
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    return jax.checkpoint(fn, policy=REMAT_POLICIES[remat], prevent_cse=True)
+
+
+class DecoderLM:
+    def __init__(self, cfg: ArchConfig, moe_groups: int = 1):
+        self.cfg = cfg
+        self.moe_groups = moe_groups
+
+    # ------------------------------------------------------------- spec
+    def spec(self) -> dict:
+        c = self.cfg
+        L, D, V = c.n_layers, c.d_model, c.vocab
+        hd = c.head_dim
+        layers: dict = {
+            "attn_norm": P((L, D), ("layers", "embed"), init="ones"),
+            "mlp_norm": P((L, D), ("layers", "embed"), init="ones"),
+        }
+        if c.mla:
+            m = c.mla
+            H = c.n_heads
+            layers.update(
+                w_dq=P((L, D, m.q_lora), ("layers", "embed", "q_lora"), init="scaled"),
+                q_norm=P((L, m.q_lora), ("layers", "q_lora"), init="ones"),
+                w_uq=P((L, m.q_lora, H, m.d_nope + m.d_rope),
+                       ("layers", "q_lora", "heads", "head_dim"), init="scaled"),
+                w_dkv=P((L, D, m.kv_lora), ("layers", "embed", "kv_lora"), init="scaled"),
+                kv_norm=P((L, m.kv_lora), ("layers", "kv_lora"), init="ones"),
+                w_uk=P((L, m.kv_lora, H, m.d_nope),
+                       ("layers", "kv_lora", "heads", "head_dim"), init="scaled"),
+                w_uv=P((L, m.kv_lora, H, m.d_v),
+                       ("layers", "kv_lora", "heads", "head_dim"), init="scaled"),
+                w_kr=P((L, D, m.d_rope), ("layers", "embed", "rope_dim"), init="scaled"),
+                w_o=P((L, H, m.d_v, D), ("layers", "heads", "head_dim", "embed"),
+                      init="scaled"),
+            )
+        else:
+            H, Hkv = c.n_heads, c.n_kv_heads
+            layers.update(
+                wq=P((L, D, H, hd), ("layers", "embed", "heads", "head_dim"),
+                     init="scaled"),
+                wk=P((L, D, Hkv, hd), ("layers", "embed", "kv_heads", "head_dim"),
+                     init="scaled"),
+                wv=P((L, D, Hkv, hd), ("layers", "embed", "kv_heads", "head_dim"),
+                     init="scaled"),
+                wo=P((L, H, hd, D), ("layers", "heads", "head_dim", "embed"),
+                     init="scaled"),
+            )
+        if c.moe:
+            e, f = c.moe.n_experts, c.moe.d_ff_expert
+            layers.update(
+                router=P((L, D, e), ("layers", "embed", "experts"), init="scaled"),
+                gate=P((L, e, D, f), ("layers", "experts", "embed", "ffn"),
+                       init="scaled"),
+                up=P((L, e, D, f), ("layers", "experts", "embed", "ffn"),
+                     init="scaled"),
+                down=P((L, e, f, D), ("layers", "experts", "ffn", "embed"),
+                       init="scaled"),
+            )
+            if c.moe.n_shared:
+                sf = c.moe.n_shared * f
+                layers.update(
+                    shared_gate=P((L, D, sf), ("layers", "embed", "ffn"), init="scaled"),
+                    shared_up=P((L, D, sf), ("layers", "embed", "ffn"), init="scaled"),
+                    shared_down=P((L, sf, D), ("layers", "ffn", "embed"), init="scaled"),
+                )
+        else:
+            F = c.d_ff
+            layers.update(
+                w_gate=P((L, D, F), ("layers", "embed", "ffn"), init="scaled"),
+                w_up=P((L, D, F), ("layers", "embed", "ffn"), init="scaled"),
+                w_down=P((L, F, D), ("layers", "ffn", "embed"), init="scaled"),
+            )
+        spec = {
+            "embed": P((V, D), ("vocab", "embed")),
+            "layers": layers,
+            "final_norm": P((D,), ("embed",), init="ones"),
+        }
+        if not c.tie_embeddings:
+            spec["lm_head"] = P((D, V), ("embed", "vocab"))
+        return spec
+
+    # ------------------------------------------------------------- blocks
+    def _attn_block(self, lp: dict, x, positions):
+        c = self.cfg
+        if c.mla:
+            out, _ = mla_prefill(
+                rms_norm(x, lp["attn_norm"]),
+                lp,
+                MLADims(n_heads=c.n_heads, **_mla_kw(c)),
+                positions,
+                c.rope_theta,
+            )
+            return out
+        h = rms_norm(x, lp["attn_norm"])
+        q = jnp.einsum("bsd,dhe->bshe", h, lp["wq"].astype(h.dtype))
+        k = jnp.einsum("bsd,dhe->bshe", h, lp["wk"].astype(h.dtype))
+        v = jnp.einsum("bsd,dhe->bshe", h, lp["wv"].astype(h.dtype))
+        q = apply_rope(q, positions, c.rope_theta)
+        k = apply_rope(k, positions, c.rope_theta)
+        o = attention(q, k, v, causal=True)
+        return jnp.einsum("bshe,hed->bsd", o, lp["wo"].astype(h.dtype))
+
+    def _mlp_block(self, lp: dict, x):
+        c = self.cfg
+        h = rms_norm(x, lp["mlp_norm"])
+        if c.moe:
+            dims = MoEDims(
+                n_experts=c.moe.n_experts,
+                top_k=c.moe.top_k,
+                d_model=c.d_model,
+                d_ff=c.moe.d_ff_expert,
+                n_shared=c.moe.n_shared,
+                capacity_factor=c.moe.capacity_factor,
+                groups=self.moe_groups,
+            )
+            out, aux = moe_forward(h, lp, dims)
+            return out, aux
+        return swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"]), jnp.float32(0.0)
+
+    # ------------------------------------------------------------- forward
+    def forward(
+        self, params: dict, tokens: jnp.ndarray, remat: str = "none"
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """tokens (B, S) -> (logits (B, S, V), aux_loss)."""
+        b, s = tokens.shape
+        x = embed(tokens, params["embed"])
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+        layer_axes = strip_layer_axis(param_axes(self.spec()["layers"]))
+
+        def block(x, lp):
+            lp = gather_layer_weights(lp, layer_axes)
+            x = x + self._attn_block(lp, x, positions)
+            mlp_out, aux = self._mlp_block(lp, x)
+            return constrain_residual(x + mlp_out), aux
+
+        block = _maybe_remat(block, remat)
+        x, auxs = jax.lax.scan(block, x, params["layers"])
+        x = rms_norm(x, params["final_norm"])
+        head = (
+            params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+        )
+        return lm_logits(x, head), auxs.mean()
+
+    # ------------------------------------------------------------- decode
+    def cache_axes(self) -> dict:
+        if self.cfg.mla:
+            return {
+                "c_kv": ("layers", "batch", "kv_seq", "kv_lora_cache"),
+                "k_rope": ("layers", "batch", "kv_seq", "rope_cache"),
+            }
+        return {
+            "k": ("layers", "batch", "kv_seq", "kv_heads", "kv_head_dim"),
+            "v": ("layers", "batch", "kv_seq", "kv_heads", "kv_head_dim"),
+        }
+
+    def init_cache(self, batch: int, max_len: int):
+        c = self.cfg
+        L = c.n_layers
+        if c.mla:
+            m = c.mla
+            return {
+                "c_kv": jnp.zeros((L, batch, max_len, m.kv_lora), COMPUTE_DTYPE),
+                "k_rope": jnp.zeros((L, batch, max_len, m.d_rope), COMPUTE_DTYPE),
+            }
+        return {
+            "k": jnp.zeros((L, batch, max_len, c.n_kv_heads, c.head_dim), COMPUTE_DTYPE),
+            "v": jnp.zeros((L, batch, max_len, c.n_kv_heads, c.head_dim), COMPUTE_DTYPE),
+        }
+
+    def decode_step(
+        self,
+        params: dict,
+        cache: dict,
+        cache_len: jnp.ndarray,     # (B,)
+        tokens: jnp.ndarray,        # (B, 1)
+    ):
+        """One decode step; returns (logits (B, 1, V), new_cache)."""
+        c = self.cfg
+        x = embed(tokens, params["embed"])
+        positions = cache_len[:, None]
+
+        if c.mla:
+            dims = MLADims(n_heads=c.n_heads, **_mla_kw(c))
+
+            def block(x, scan_in):
+                lp, cache_l = scan_in
+                attn_in = rms_norm(x, lp["attn_norm"])
+                out, new_cache = mla_decode(
+                    attn_in, lp, dims, cache_l, cache_len, c.rope_theta
+                )
+                x = x + out
+                mlp_out, _ = self._mlp_block(lp, x)
+                return x + mlp_out, new_cache
+
+        else:
+
+            def block(x, scan_in):
+                lp, cache_l = scan_in
+                h = rms_norm(x, lp["attn_norm"])
+                q = jnp.einsum("bsd,dhe->bshe", h, lp["wq"].astype(h.dtype))
+                k = jnp.einsum("bsd,dhe->bshe", h, lp["wk"].astype(h.dtype))
+                v = jnp.einsum("bsd,dhe->bshe", h, lp["wv"].astype(h.dtype))
+                q = apply_rope(q, positions, c.rope_theta)
+                k = apply_rope(k, positions, c.rope_theta)
+                s_max = cache_l["k"].shape[1]
+                oh = jax.nn.one_hot(cache_len, s_max, dtype=k.dtype)    # (B, S)
+                k_all = cache_l["k"] + oh[:, :, None, None] * k
+                v_all = cache_l["v"] + oh[:, :, None, None] * v
+                # single-token decode: the kv_len mask IS the causal mask
+                o = attention(q, k_all, v_all, causal=False, kv_len=cache_len + 1)
+                x = x + jnp.einsum("bshe,hed->bsd", o, lp["wo"].astype(h.dtype))
+                mlp_out, _ = self._mlp_block(lp, x)
+                return x + mlp_out, {"k": k_all, "v": v_all}
+
+        x, new_cache = jax.lax.scan(block, x, (params["layers"], cache))
+        x = rms_norm(x, params["final_norm"])
+        head = params["embed"].T if c.tie_embeddings else params["lm_head"]
+        return lm_logits(x, head), new_cache
+
+
+def _mla_kw(c: ArchConfig) -> dict:
+    m = c.mla
+    return dict(
+        q_lora=m.q_lora, kv_lora=m.kv_lora, d_nope=m.d_nope,
+        d_rope=m.d_rope, d_v=m.d_v,
+    )

@@ -1,0 +1,202 @@
+"""Hybrid Mamba2 + shared-attention LM (zamba2-1.2b, arXiv:2411.15242).
+
+Layer pattern: runs of ``shared_attn_every`` Mamba2 blocks, punctuated by a
+single *weight-shared* GQA attention block (Zamba's signature trick: one
+transformer block's weights reused at every insertion point; each insertion
+keeps its own KV cache).  38 = 6 x 6 + 2 for zamba2-1.2b: six
+(6-mamba + shared-attn) groups, then a 2-mamba tail.
+
+Simplification vs the released checkpoints (noted in DESIGN.md): Zamba2
+concatenates the original embedding into the shared block input and adds
+per-invocation LoRA deltas; we apply the shared block on the hidden state
+directly.  Structure (weight sharing + cadence + dual cache types) is
+preserved — that is what the sharding/roofline care about.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .decoder import _maybe_remat
+from .layers import COMPUTE_DTYPE, apply_rope, attention, embed, lm_logits, rms_norm, swiglu
+from .mamba2 import mamba2_decode, mamba2_forward
+from ..sharding.constrain import (
+    constrain_residual,
+    gather_layer_weights,
+    strip_layer_axis,
+)
+from .param import P, param_axes
+from .ssm import mamba_layer_spec, ssm_dims
+
+
+class HybridLM:
+    def __init__(self, cfg: ArchConfig, moe_groups: int = 1):
+        assert cfg.shared_attn_every > 0
+        self.cfg = cfg
+        self.dims = ssm_dims(cfg)
+        self.n_groups = cfg.n_layers // cfg.shared_attn_every
+        self.tail = cfg.n_layers - self.n_groups * cfg.shared_attn_every
+
+    # ------------------------------------------------------------- spec
+    def spec(self) -> dict:
+        c = self.cfg
+        hd = c.head_dim
+        shared = {
+            "attn_norm": P((c.d_model,), ("embed",), init="ones"),
+            "wq": P((c.d_model, c.n_heads, hd), ("embed", "heads", "head_dim"),
+                    init="scaled"),
+            "wk": P((c.d_model, c.n_kv_heads, hd), ("embed", "kv_heads", "head_dim"),
+                    init="scaled"),
+            "wv": P((c.d_model, c.n_kv_heads, hd), ("embed", "kv_heads", "head_dim"),
+                    init="scaled"),
+            "wo": P((c.n_heads, hd, c.d_model), ("heads", "head_dim", "embed"),
+                    init="scaled"),
+            "mlp_norm": P((c.d_model,), ("embed",), init="ones"),
+            "w_gate": P((c.d_model, c.d_ff), ("embed", "ffn"), init="scaled"),
+            "w_up": P((c.d_model, c.d_ff), ("embed", "ffn"), init="scaled"),
+            "w_down": P((c.d_ff, c.d_model), ("ffn", "embed"), init="scaled"),
+        }
+        spec = {
+            "embed": P((c.vocab, c.d_model), ("vocab", "embed")),
+            "mamba": mamba_layer_spec(c.n_layers, self.dims),
+            "shared_attn": shared,
+            "final_norm": P((c.d_model,), ("embed",), init="ones"),
+            "lm_head": P((c.d_model, c.vocab), ("embed", "vocab")),
+        }
+        return spec
+
+    # ------------------------------------------------------------- helpers
+    def _split_mamba(self, mamba_params):
+        """Stacked (L, ...) -> grouped (G, every, ...) + tail (T, ...)."""
+        every, g = self.cfg.shared_attn_every, self.n_groups
+        grouped = jax.tree_util.tree_map(
+            lambda a: a[: g * every].reshape((g, every) + a.shape[1:]), mamba_params
+        )
+        tail = jax.tree_util.tree_map(lambda a: a[g * every :], mamba_params)
+        return grouped, tail
+
+    def _shared_attn_block(self, sp, x, positions, cache=None, cache_len=None):
+        c = self.cfg
+        h = rms_norm(x, sp["attn_norm"])
+        q = jnp.einsum("bsd,dhe->bshe", h, sp["wq"].astype(h.dtype))
+        k = jnp.einsum("bsd,dhe->bshe", h, sp["wk"].astype(h.dtype))
+        v = jnp.einsum("bsd,dhe->bshe", h, sp["wv"].astype(h.dtype))
+        q = apply_rope(q, positions, c.rope_theta)
+        k = apply_rope(k, positions, c.rope_theta)
+        if cache is None:
+            o = attention(q, k, v, causal=True)
+            new_cache = None
+        else:
+            s_max = cache["k"].shape[1]
+            oh = jax.nn.one_hot(cache_len, s_max, dtype=k.dtype)
+            k_all = cache["k"] + oh[:, :, None, None] * k
+            v_all = cache["v"] + oh[:, :, None, None] * v
+            o = attention(q, k_all, v_all, causal=False, kv_len=cache_len + 1)
+            new_cache = {"k": k_all, "v": v_all}
+        x = x + jnp.einsum("bshe,hed->bsd", o, sp["wo"].astype(h.dtype))
+        m = rms_norm(x, sp["mlp_norm"])
+        x = x + swiglu(m, sp["w_gate"], sp["w_up"], sp["w_down"])
+        return x, new_cache
+
+    # ------------------------------------------------------------- forward
+    def forward(self, params, tokens, remat: str = "none"):
+        b, s = tokens.shape
+        x = embed(tokens, params["embed"])
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        grouped, tail = self._split_mamba(params["mamba"])
+        sp = params["shared_attn"]
+
+        layer_axes = strip_layer_axis(param_axes(self.spec()["mamba"]))
+
+        def mamba_block(x, lp):
+            lp = gather_layer_weights(lp, layer_axes)
+            h = rms_norm(x, lp["pre_norm"])
+            return constrain_residual(x + mamba2_forward(h, lp, self.dims)), ()
+
+        mamba_block = _maybe_remat(mamba_block, remat)
+
+        def group(x, gp):
+            x, _ = jax.lax.scan(mamba_block, x, gp)
+            x, _ = self._shared_attn_block(sp, x, positions)
+            return x, ()
+
+        x, _ = jax.lax.scan(group, x, grouped)
+        if self.tail:
+            x, _ = jax.lax.scan(mamba_block, x, tail)
+        x = rms_norm(x, params["final_norm"])
+        return lm_logits(x, params["lm_head"]), jnp.float32(0.0)
+
+    # ------------------------------------------------------------- decode
+    def cache_axes(self) -> dict:
+        return {
+            "conv": ("layers", "batch", None, "ssm_inner"),
+            "ssm": ("layers", "batch", "heads", None, None),
+            "attn_k": (None, "batch", "kv_seq", "kv_heads", "kv_head_dim"),
+            "attn_v": (None, "batch", "kv_seq", "kv_heads", "kv_head_dim"),
+        }
+
+    def init_cache(self, batch: int, max_len: int):
+        d = self.dims
+        c = self.cfg
+        L, G = c.n_layers, self.n_groups
+        return {
+            "conv": jnp.zeros((L, batch, d.d_conv - 1, d.conv_dim), COMPUTE_DTYPE),
+            "ssm": jnp.zeros((L, batch, d.n_heads, d.head_dim, d.d_state), jnp.float32),
+            "attn_k": jnp.zeros((G, batch, max_len, c.n_kv_heads, c.head_dim),
+                                COMPUTE_DTYPE),
+            "attn_v": jnp.zeros((G, batch, max_len, c.n_kv_heads, c.head_dim),
+                                COMPUTE_DTYPE),
+        }
+
+    def decode_step(self, params, cache, cache_len, tokens):
+        c = self.cfg
+        x = embed(tokens, params["embed"])
+        positions = cache_len[:, None]
+        sp = params["shared_attn"]
+        every, g = c.shared_attn_every, self.n_groups
+
+        mamba_cache = {"conv": cache["conv"], "ssm": cache["ssm"]}
+        grouped, tail_p = self._split_mamba(params["mamba"])
+        grouped_cache = jax.tree_util.tree_map(
+            lambda a: a[: g * every].reshape((g, every) + a.shape[1:]), mamba_cache
+        )
+        tail_cache = jax.tree_util.tree_map(lambda a: a[g * every :], mamba_cache)
+
+        def mamba_block(x, scan_in):
+            lp, cache_l = scan_in
+            h = rms_norm(x, lp["pre_norm"])
+            out, new_cache = mamba2_decode(h, lp, self.dims, cache_l)
+            return x + out, new_cache
+
+        def group(x, scan_in):
+            gp, gcache, acache = scan_in
+            x, new_mcache = jax.lax.scan(mamba_block, x, (gp, gcache))
+            x, new_acache = self._shared_attn_block(
+                sp, x, positions, cache=acache, cache_len=cache_len
+            )
+            return x, (new_mcache, new_acache)
+
+        attn_cache = {"k": cache["attn_k"], "v": cache["attn_v"]}
+        x, (new_grouped, new_attn) = jax.lax.scan(
+            group, x, (grouped, grouped_cache, attn_cache)
+        )
+        if self.tail:
+            x, new_tail = jax.lax.scan(mamba_block, x, (tail_p, tail_cache))
+        else:
+            new_tail = tail_cache
+        x = rms_norm(x, params["final_norm"])
+        logits = lm_logits(x, params["lm_head"])
+
+        def unsplit(gr, tl):
+            flat = gr.reshape((g * every,) + gr.shape[2:])
+            return jnp.concatenate([flat, tl], axis=0)
+
+        new_cache = {
+            "conv": unsplit(new_grouped["conv"], new_tail["conv"]),
+            "ssm": unsplit(new_grouped["ssm"], new_tail["ssm"]),
+            "attn_k": new_attn["k"],
+            "attn_v": new_attn["v"],
+        }
+        return logits, new_cache

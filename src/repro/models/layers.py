@@ -1,0 +1,159 @@
+"""Core transformer layers: norms, RoPE, GQA attention (dense + chunked
+online-softmax for long prefill), SwiGLU/GELU MLPs, embeddings.
+
+All functions are pure: (params, inputs) -> outputs.  Compute dtype is
+bf16 (cast at the edges); reductions (softmax, norms) run in fp32.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+# ---------------------------------------------------------------- norms
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(
+    x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- rope
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0
+) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+
+def _dense_attn(
+    q: jnp.ndarray,      # (B, Sq, H, D)
+    k: jnp.ndarray,      # (B, Sk, Hkv, D)
+    v: jnp.ndarray,      # (B, Sk, Hkv, D)
+    *,
+    causal: bool,
+    q_offset: jnp.ndarray | int = 0,
+    kv_len: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Reference attention with GQA head grouping; scores in fp32."""
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, sq, hkv, group, d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    scores = scores * (1.0 / math.sqrt(d))
+    sk = k.shape[1]
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(sk)[None, :]
+        mask = qpos >= kpos
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    if kv_len is not None:
+        valid = jnp.arange(sk)[None, :] < kv_len[:, None]        # (B, Sk)
+        scores = jnp.where(valid[:, None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, h, d)
+
+
+def _chunked_attn(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *, causal: bool, q_chunk: int
+) -> jnp.ndarray:
+    """Query-chunked online-softmax attention (flash-attention dataflow in
+    pure JAX): peak score memory is (B, H, q_chunk, Sk) instead of
+    (B, H, Sq, Sk).  Used for long prefill (Sq >= LONG_SEQ_THRESHOLD)."""
+    b, sq, h, d = q.shape
+    assert sq % q_chunk == 0, (sq, q_chunk)
+    n_chunks = sq // q_chunk
+    qc = q.reshape(b, n_chunks, q_chunk, h, d).transpose(1, 0, 2, 3, 4)
+
+    def one_chunk(i, q_i):
+        return _dense_attn(
+            q_i, k, v, causal=causal, q_offset=i * q_chunk
+        )
+
+    out = jax.lax.map(
+        lambda args: one_chunk(args[0], args[1]),
+        (jnp.arange(n_chunks), qc),
+    )
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d)
+
+
+LONG_SEQ_THRESHOLD = 8192
+ATTN_Q_CHUNK = 2048
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_offset: jnp.ndarray | int = 0,
+    kv_len: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """GQA attention; switches to query-chunked dataflow for long prefill."""
+    sq, sk = q.shape[1], k.shape[1]
+    if sq > LONG_SEQ_THRESHOLD and sq == sk and kv_len is None:
+        return _chunked_attn(q, k, v, causal=causal, q_chunk=ATTN_Q_CHUNK)
+    return _dense_attn(q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len)
+
+
+# ---------------------------------------------------------------- mlps
+
+
+def swiglu(x: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
+    g = jnp.einsum("bsd,df->bsf", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, w_up.astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, w_down.astype(x.dtype))
+
+
+def gelu_mlp(x: jnp.ndarray, w_up, b_up, w_down, b_down) -> jnp.ndarray:
+    h = jnp.einsum("bsd,df->bsf", x, w_up.astype(x.dtype)) + b_up.astype(x.dtype)
+    h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, w_down.astype(x.dtype)) + b_down.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- embed / head
+
+
+def embed(tokens: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0).astype(COMPUTE_DTYPE)
+
+
+def lm_logits(x: jnp.ndarray, head: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))

@@ -1,0 +1,213 @@
+"""Mamba-2 / SSD (state-space duality) block (arXiv:2405.21060).
+
+Training/prefill path: the chunked SSD algorithm — intra-chunk quadratic
+('attention-like') term + inter-chunk recurrent state propagation via
+lax.scan.  HLO size is O(1) in sequence length; memory is
+O(S * Q + S/Q * H * P * N) instead of O(S^2).
+
+Decode path: single-token recurrence on the (H, P, N) state with a rolling
+depthwise-conv tail — the serve_step cache.
+
+Shapes follow the Mamba-2 reference: d_inner = expand * d_model,
+H = d_inner / head_dim heads, B/C shared across heads in n_groups groups.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+
+
+@dataclass(frozen=True)
+class SSMDims:
+    d_model: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    @property
+    def in_proj_dim(self) -> int:
+        return 2 * self.d_inner + 2 * self.n_groups * self.d_state + self.n_heads
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., Q) -> (..., Q, Q);  out[i, j] = sum_{k in (j, i]} x[k] for
+    i >= j, -inf above the diagonal."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.arange(q)[:, None] >= jnp.arange(q)[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,       # (B, S, H, P)
+    dt: jnp.ndarray,      # (B, S, H)   post-softplus
+    a_log: jnp.ndarray,   # (H,)        A = -exp(a_log)
+    b: jnp.ndarray,       # (B, S, G, N)
+    c: jnp.ndarray,       # (B, S, G, N)
+    chunk: int,
+) -> jnp.ndarray:
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    A = -jnp.exp(a_log.astype(jnp.float32))                       # (H,)
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+    bc = jnp.repeat(b.reshape(bsz, nc, chunk, g, n), rep, axis=3)  # (B,nc,Q,H,N)
+    cc = jnp.repeat(c.reshape(bsz, nc, chunk, g, n), rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]                              # (B,nc,Q,H)
+    dA_cs = jnp.cumsum(dA, axis=2)                                 # (B,nc,Q,H)
+
+    # --- intra-chunk (diagonal) term
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))                 # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", cc, bc)              # (B,nc,H,Q,Q)
+    att = scores * L * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", att.astype(x.dtype), xc)
+
+    # --- per-chunk end states
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)           # (B,nc,Q,H)
+    states = jnp.einsum(
+        "bcqhn,bcqh,bcqhp->bchpn",
+        bc.astype(jnp.float32),
+        (decay_states * dtc),
+        xc.astype(jnp.float32),
+    )                                                              # (B,nc,H,P,N)
+
+    # --- inter-chunk recurrence (sequential scan over chunks)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                      # (B,nc,H)
+
+    def step(h_prev, inp):
+        st, dec = inp                                              # (B,H,P,N), (B,H)
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    _, h_in = jax.lax.scan(
+        step,
+        h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                           # (B,nc,H,P,N)
+
+    # --- inter-chunk output: y_off[q] = (C_q . h_in) * exp(dA_cs[q])
+    decay_in = jnp.exp(dA_cs)                                      # (B,nc,Q,H)
+    y_off = jnp.einsum(
+        "bcqhn,bchpn,bcqh->bcqhp", cc.astype(jnp.float32), h_in, decay_in
+    ).astype(x.dtype)
+
+    return (y_diag + y_off).reshape(bsz, s, h, p)
+
+
+def _causal_depthwise_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, C), w: (K, C) — causal depthwise conv via shift-and-add
+    (K is tiny, typically 4)."""
+    k = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1], :]
+        out = out + xi * w[i][None, None, :]
+    return out
+
+
+def mamba2_forward(
+    x: jnp.ndarray,        # (B, S, D)
+    p: dict,
+    dims: SSMDims,
+) -> jnp.ndarray:
+    bsz, s, _ = x.shape
+    di, g, n, h, hd = (
+        dims.d_inner,
+        dims.n_groups,
+        dims.d_state,
+        dims.n_heads,
+        dims.head_dim,
+    )
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    # split points: z (di), xbc (conv_dim), dt (H)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + dims.conv_dim]
+    dt = zxbcdt[..., di + dims.conv_dim :]
+
+    xbc = jax.nn.silu(_causal_depthwise_conv(xbc, p["conv_w"].astype(x.dtype)))
+    xs = xbc[..., :di]
+    b = xbc[..., di : di + g * n].reshape(bsz, s, g, n)
+    c = xbc[..., di + g * n :].reshape(bsz, s, g, n)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    y = ssd_chunked(
+        xs.reshape(bsz, s, h, hd), dt, p["a_log"], b, c, min(dims.chunk, s)
+    )
+    y = y + xs.reshape(bsz, s, h, hd) * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+
+
+def mamba2_decode(
+    x: jnp.ndarray,        # (B, 1, D)
+    p: dict,
+    dims: SSMDims,
+    cache: dict,           # conv (B, K-1, conv_dim), ssm (B, H, P, N) fp32
+) -> tuple[jnp.ndarray, dict]:
+    bsz = x.shape[0]
+    di, g, n, h, hd = (
+        dims.d_inner,
+        dims.n_groups,
+        dims.d_state,
+        dims.n_heads,
+        dims.head_dim,
+    )
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))[:, 0]
+    z = zxbcdt[:, :di]
+    xbc_new = zxbcdt[:, di : di + dims.conv_dim]
+    dt = zxbcdt[:, di + dims.conv_dim :]
+
+    conv_hist = jnp.concatenate([cache["conv"], xbc_new[:, None, :]], axis=1)
+    w = p["conv_w"].astype(x.dtype)                                  # (K, C)
+    xbc = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_hist, w))
+    new_conv = conv_hist[:, 1:]
+
+    xs = xbc[:, :di].reshape(bsz, h, hd)
+    b = xbc[:, di : di + g * n].reshape(bsz, g, n)
+    c = xbc[:, di + g * n :].reshape(bsz, g, n)
+    rep = h // g
+    b = jnp.repeat(b, rep, axis=1)                                  # (B, H, N)
+    c = jnp.repeat(c, rep, axis=1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A[None, :])                                # (B, H)
+    ssm = cache["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xs.astype(jnp.float32), b.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", ssm, c.astype(jnp.float32)).astype(x.dtype)
+    y = y + xs * p["d_skip"].astype(x.dtype)[None, :, None]
+    y = y.reshape(bsz, 1, di)
+    y = rms_norm(y * jax.nn.silu(z[:, None, :]), p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, {"conv": new_conv, "ssm": ssm}

@@ -1,0 +1,140 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Prefill: standard formulation —
+    c_q  = W_dq x             (q_lora)         q = W_uq RMSNorm(c_q)
+    c_kv = W_dkv x            (kv_lora)        k_nope, v = W_uk/W_uv RMSNorm(c_kv)
+    k_rope = RoPE(W_kr x)     (d_rope, shared across heads)
+    score = q_nope . k_nope + q_rope . k_rope, scale 1/sqrt(d_nope + d_rope)
+
+Decode: the *absorbed* formulation — the KV cache stores only the latent
+``c_kv`` (kv_lora) and ``k_rope`` per token (this is MLA's entire point:
+512 + 64 floats/token instead of 2 * H * 128).  W_uk is absorbed into the
+query and W_uv into the output so no per-step (S, H, d) K/V tensors are
+materialized:
+    q_lat  = einsum(q_nope, W_uk)        (B, 1, H, kv_lora)
+    score  = q_lat . norm(c_kv) + q_rope . k_rope
+    o_lat  = probs . norm(c_kv)          (B, 1, H, kv_lora)
+    out    = einsum(o_lat, W_uv)         (B, 1, H, d_v)
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, rms_norm
+
+MLA_CHUNK_THRESHOLD = 8192
+MLA_Q_CHUNK = 2048
+
+
+@dataclass(frozen=True)
+class MLADims:
+    n_heads: int
+    q_lora: int = 1536
+    kv_lora: int = 512
+    d_nope: int = 128
+    d_rope: int = 64
+    d_v: int = 128
+
+    @property
+    def scale(self) -> float:
+        return 1.0 / math.sqrt(self.d_nope + self.d_rope)
+
+
+def mla_prefill(
+    x: jnp.ndarray,          # (B, S, D)
+    p: dict,
+    dims: MLADims,
+    positions: jnp.ndarray,  # (B, S)
+    rope_theta: float = 10000.0,
+) -> tuple[jnp.ndarray, dict]:
+    """Returns (attn_out (B,S,D), cache {c_kv, k_rope})."""
+    b, s, d = x.shape
+    h, dn, dr, dv = dims.n_heads, dims.d_nope, dims.d_rope, dims.d_v
+
+    cq = jnp.einsum("bsd,dq->bsq", x, p["w_dq"].astype(x.dtype))
+    cq = rms_norm(cq, p["q_norm"])
+    q = jnp.einsum("bsq,qhe->bshe", cq, p["w_uq"].astype(x.dtype))  # e = dn+dr
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    c_kv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(x.dtype))
+    c_kv_n = rms_norm(c_kv, p["kv_norm"])
+    k_nope = jnp.einsum("bsr,rhe->bshe", c_kv_n, p["w_uk"].astype(x.dtype))
+    v = jnp.einsum("bsr,rhe->bshe", c_kv_n, p["w_uv"].astype(x.dtype))
+    k_rope = jnp.einsum("bsd,de->bse", x, p["w_kr"].astype(x.dtype))
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, rope_theta)[:, :, 0]
+
+    def attend(q_nope_c, q_rope_c, q_off):
+        """One query chunk against the full K/V (scores in fp32)."""
+        sq = q_nope_c.shape[1]
+        scores = (
+            jnp.einsum("bqhe,bkhe->bhqk", q_nope_c, k_nope)
+            + jnp.einsum("bqhe,bke->bhqk", q_rope_c, k_rope)
+        ).astype(jnp.float32) * dims.scale
+        mask = (jnp.arange(sq)[:, None] + q_off) >= jnp.arange(s)[None, :]
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        return jnp.einsum("bhqk,bkhe->bqhe", probs, v)
+
+    if s > MLA_CHUNK_THRESHOLD:
+        # query-chunked dataflow: peak scores memory (B, H, chunk, S)
+        nq = s // MLA_Q_CHUNK
+        qn = q_nope.reshape(b, nq, MLA_Q_CHUNK, h, dn).transpose(1, 0, 2, 3, 4)
+        qr = q_rope.reshape(b, nq, MLA_Q_CHUNK, h, dr).transpose(1, 0, 2, 3, 4)
+        ctx = jax.lax.map(
+            lambda args: attend(args[1], args[2], args[0] * MLA_Q_CHUNK),
+            (jnp.arange(nq), qn, qr),
+        )
+        ctx = ctx.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dims.d_v)
+    else:
+        ctx = attend(q_nope, q_rope, 0)                    # (B,S,H,dv)
+    out = jnp.einsum("bqhe,hed->bqd", ctx, p["w_o"].astype(x.dtype))
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_decode(
+    x: jnp.ndarray,          # (B, 1, D)
+    p: dict,
+    dims: MLADims,
+    cache: dict,             # c_kv (B, S, kv_lora), k_rope (B, S, d_rope)
+    cache_len: jnp.ndarray,  # (B,) current lengths (new token goes at this pos)
+    rope_theta: float = 10000.0,
+) -> tuple[jnp.ndarray, dict]:
+    b, _, d = x.shape
+    h, dn, dr = dims.n_heads, dims.d_nope, dims.d_rope
+    s_max = cache["c_kv"].shape[1]
+    positions = cache_len[:, None]                          # (B, 1)
+
+    cq = rms_norm(jnp.einsum("bsd,dq->bsq", x, p["w_dq"].astype(x.dtype)), p["q_norm"])
+    q = jnp.einsum("bsq,qhe->bshe", cq, p["w_uq"].astype(x.dtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    c_kv_new = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(x.dtype))
+    k_rope_new = jnp.einsum("bsd,de->bse", x, p["w_kr"].astype(x.dtype))
+    k_rope_new = apply_rope(k_rope_new[:, :, None, :], positions, rope_theta)[:, :, 0]
+
+    # insert at cache_len
+    oh = jax.nn.one_hot(cache_len, s_max, dtype=cache["c_kv"].dtype)  # (B, S)
+    c_kv = cache["c_kv"] + oh[..., None] * c_kv_new
+    k_rope = cache["k_rope"] + oh[..., None] * k_rope_new
+
+    c_kv_n = rms_norm(c_kv, p["kv_norm"])
+    # absorbed attention in latent space
+    q_lat = jnp.einsum("bshe,rhe->bshr", q_nope, p["w_uk"].astype(x.dtype))
+    scores = (
+        jnp.einsum("bshr,bkr->bhsk", q_lat, c_kv_n)
+        + jnp.einsum("bshe,bke->bhsk", q_rope, k_rope)
+    ).astype(jnp.float32) * dims.scale
+    valid = jnp.arange(s_max)[None, :] <= cache_len[:, None]
+    scores = jnp.where(valid[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhsk,bkr->bshr", probs, c_kv_n)
+    ctx = jnp.einsum("bshr,rhe->bshe", o_lat, p["w_uv"].astype(x.dtype))
+    out = jnp.einsum("bshe,hed->bsd", ctx, p["w_o"].astype(x.dtype))
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

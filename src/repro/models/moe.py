@@ -1,0 +1,202 @@
+"""Mixture-of-Experts layer with sort-based grouped dispatch.
+
+Design (DESIGN.md section 5): tokens are reshaped into G groups (set to the
+data-parallel shard count by the launcher so dispatch is local to a data
+shard and the expert dimension is the only one that crosses chips).  Within
+each group:
+
+    1. router: softmax top-k over E experts,
+    2. dispatch: stable-argsort the (tokens*k) expert assignments, give each
+       assignment a slot within its expert via rank - segment_start, drop
+       assignments past the per-expert capacity
+       C = ceil(tokens_g * k / E * capacity_factor),
+    3. gather to an (E, C, D) buffer (a padded row absorbs drops),
+    4. batched expert FFN:  einsum('ecd,edf->ecf') SwiGLU,
+    5. combine: scatter-add outputs * gate weights back to token positions.
+
+This avoids the O(tokens * E * C) one-hot dispatch tensors of the GShard
+formulation — the buffers here are O(tokens * k / G * D) per group — while
+staying fully static-shaped (vmap over groups, no ragged shapes), which is
+what pjit needs.  Capacity drops mirror production MoE (tokens past C fall
+through with a zero update, residual carries them).
+
+DeepSeek-style shared experts (always-on) are supported via ``n_shared``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+#: EXPERIMENTS.md §Perf H2: constrain the grouped-dispatch tensors so the
+#: gather/scatter stays local to a data shard (group dim on the batch axes,
+#: expert dim on "model").  Without this XLA's SPMD partitioner falls back
+#: to 'involuntary full rematerialization' — it REPLICATES the (T, D)
+#: combine buffer per device and all-reduces it per layer (~1.2 TB/device
+#: per step on deepseek-v2 train_4k).  Off by default (baseline).
+CONSTRAIN_DISPATCH = False
+#: finer-grained variant (§Perf H6): constrain ONLY the group-reshaped
+#: activations (G on the data axes) — sharding propagation loses the group
+#: dim at the (B,S,D)->(G,T,D) reshape and silently REPLICATES all groups on
+#: every data shard; this pins it without touching the expert buffers.
+CONSTRAIN_GROUPS_ONLY = False
+
+
+def _constrain(x, *parts, group_level: bool = False):
+    if not (CONSTRAIN_DISPATCH or (CONSTRAIN_GROUPS_ONLY and group_level)):
+        return x
+    from ..sharding.constrain import _active_mesh
+
+    mesh = _active_mesh()
+    if mesh is None:
+        return x
+    from jax.sharding import PartitionSpec
+
+    def resolve(p, dim):
+        if p == "batch":
+            axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+            import numpy as _np
+
+            n = int(_np.prod([mesh.shape[a] for a in axes])) if axes else 1
+            if axes and x.shape[dim] % n == 0:
+                return axes if len(axes) > 1 else axes[0]
+            return None
+        if p == "model":
+            if "model" in mesh.axis_names and x.shape[dim] % mesh.shape["model"] == 0:
+                return "model"
+            return None
+        return None
+
+    return jax.lax.with_sharding_constraint(
+        x, PartitionSpec(*(resolve(p, i) for i, p in enumerate(parts)))
+    )
+
+
+@dataclass(frozen=True)
+class MoEDims:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    groups: int = 1
+
+
+def router_topk(
+    x: jnp.ndarray, w_router: jnp.ndarray, top_k: int
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(T, D) -> gates (T, k) fp32 (renormalized), experts (T, k) int32,
+    plus the full router probabilities (T, E) for the aux loss."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), w_router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, experts.astype(jnp.int32), probs
+
+
+def _dispatch_indices(
+    experts: jnp.ndarray, n_experts: int, capacity: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """experts: (A,) flat expert assignment per (token, k) pair.
+
+    Returns (slot_table, keep):
+      slot_table: (E, C) int32 indices into the flat assignment axis
+                  (= A, i.e. 'dropped/empty' sentinel points at pad row A),
+      keep: (A,) bool — assignment survived capacity.
+    """
+    a = experts.shape[0]
+    order = jnp.argsort(experts, stable=True)              # (A,)
+    sorted_e = experts[order]
+    # rank of each sorted element within its expert segment
+    pos = jnp.arange(a, dtype=jnp.int32)
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(n_experts), side="left")
+    rank = pos - seg_start[sorted_e]
+    keep_sorted = rank < capacity
+    # scatter into (E, C): slot (e, r) <- original assignment index
+    flat_slot = sorted_e * capacity + rank
+    slot_table = jnp.full((n_experts * capacity,), a, dtype=jnp.int32)
+    slot_table = slot_table.at[
+        jnp.where(keep_sorted, flat_slot, n_experts * capacity)
+    ].set(jnp.where(keep_sorted, order.astype(jnp.int32), a), mode="drop")
+    keep = jnp.zeros((a,), bool).at[order].set(keep_sorted)
+    return slot_table.reshape(n_experts, capacity), keep
+
+
+def moe_group_forward(
+    x: jnp.ndarray,            # (T, D) one group's tokens
+    w_router: jnp.ndarray,     # (D, E)
+    w_gate: jnp.ndarray,       # (E, D, F)
+    w_up: jnp.ndarray,         # (E, D, F)
+    w_down: jnp.ndarray,       # (E, F, D)
+    dims: MoEDims,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    t, d = x.shape
+    e, k = dims.n_experts, dims.top_k
+    capacity = math.ceil(t * k / e * dims.capacity_factor)
+    capacity = max(8, min(capacity, t))
+
+    gates, experts, probs = router_topk(x, w_router, k)
+    flat_experts = experts.reshape(-1)                       # (T*k,)
+    slot_table, _ = _dispatch_indices(flat_experts, e, capacity)
+
+    token_of_assignment = jnp.concatenate(
+        [jnp.repeat(jnp.arange(t, dtype=jnp.int32), k), jnp.array([t], jnp.int32)]
+    )                                                         # (T*k + 1,)
+    gate_of_assignment = jnp.concatenate(
+        [gates.reshape(-1), jnp.zeros((1,), gates.dtype)]
+    )
+
+    tok_idx = token_of_assignment[slot_table]                 # (E, C) in [0..T]
+    gate_w = gate_of_assignment[slot_table]                   # (E, C) fp32
+
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    xs = x_pad[tok_idx]                                       # (E, C, D)
+    xs = _constrain(xs, "model", None, None)                  # experts on EP axis
+
+    g = jnp.einsum("ecd,edf->ecf", xs, w_gate.astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xs, w_up.astype(x.dtype))
+    ys = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, w_down.astype(x.dtype))
+    ys = ys * gate_w[..., None].astype(x.dtype)
+
+    out = jnp.zeros((t + 1, d), x.dtype).at[tok_idx.reshape(-1)].add(
+        ys.reshape(-1, d)
+    )[:t]
+
+    # load-balancing auxiliary loss (Switch-style): E * sum_e f_e * p_e
+    frac_tokens = jnp.zeros((e,), jnp.float32).at[flat_experts].add(1.0) / (t * k)
+    mean_probs = probs.mean(axis=0)
+    aux = e * jnp.sum(frac_tokens * mean_probs)
+    return out, aux
+
+
+def moe_forward(
+    x: jnp.ndarray,            # (B, S, D)
+    params: dict,              # router, gate, up, down [, shared_*]
+    dims: MoEDims,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, d = x.shape
+    g = dims.groups
+    tokens = b * s
+    assert tokens % g == 0, (tokens, g)
+    xg = x.reshape(g, tokens // g, d)
+    xg = _constrain(xg, "batch", None, None, group_level=True)
+
+    out, aux = jax.vmap(
+        lambda xi: moe_group_forward(
+            xi, params["router"], params["gate"], params["up"], params["down"], dims
+        )
+    )(xg)
+    out = _constrain(out, "batch", None, None, group_level=True)
+    out = out.reshape(b, s, d)
+
+    if dims.n_shared:
+        gsh = jnp.einsum("bsd,df->bsf", x, params["shared_gate"].astype(x.dtype))
+        ush = jnp.einsum("bsd,df->bsf", x, params["shared_up"].astype(x.dtype))
+        out = out + jnp.einsum(
+            "bsf,fd->bsd", jax.nn.silu(gsh) * ush, params["shared_down"].astype(x.dtype)
+        )
+    return out, aux.mean()

@@ -1,0 +1,83 @@
+"""Minimal parameter-spec system (no flax dependency).
+
+A model is defined by a *spec tree*: nested dicts whose leaves are
+:class:`P` — (shape, dtype, logical_axes, init).  From one spec we derive:
+
+  * ``init_params(spec, rng)``     — materialized arrays (smoke tests, training)
+  * ``abstract_params(spec)``      — ShapeDtypeStructs (dry-run, no allocation)
+  * ``param_axes(spec)``           — logical-axis name tree for the sharding
+                                     rules in repro.sharding.rules
+
+Logical axis names used across the zoo:
+    "layers"   — stacked per-layer leading dim (scan-over-layers)
+    "vocab"    — vocabulary dim
+    "embed"    — d_model
+    "heads"    — attention heads (query)
+    "kv_heads" — KV heads
+    "head_dim" — per-head dim
+    "ffn"      — MLP hidden dim
+    "experts"  — MoE expert dim
+    "ssm_inner" / "ssm_state" / "conv" — Mamba2 dims
+    "q_lora" / "kv_lora" / "rope_dim"  — MLA dims
+    None       — replicated dim
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class P:
+    shape: tuple
+    axes: tuple               # logical axis name (or None) per dim
+    dtype: jnp.dtype = jnp.float32
+    init: str = "normal"      # normal | zeros | ones | scaled (fan-in)
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes} rank mismatch")
+
+
+def is_leaf(x) -> bool:
+    return isinstance(x, P)
+
+
+def _initializer(p: P, key: jax.Array) -> jax.Array:
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, p.dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, p.dtype)
+    if p.init == "normal":
+        return (0.02 * jax.random.normal(key, p.shape)).astype(p.dtype)
+    if p.init == "scaled":  # fan-in scaled
+        fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+        return (jax.random.normal(key, p.shape) / np.sqrt(fan_in)).astype(p.dtype)
+    raise ValueError(f"unknown init {p.init}")
+
+
+def init_params(spec, rng: jax.Array):
+    leaves, treedef = jax.tree_util.tree_flatten(spec, is_leaf=is_leaf)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_initializer(p, k) for p, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(spec):
+    return jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), spec, is_leaf=is_leaf
+    )
+
+
+def param_axes(spec):
+    return jax.tree_util.tree_map(lambda p: p.axes, spec, is_leaf=is_leaf)
+
+
+def param_count(spec) -> int:
+    leaves = jax.tree_util.tree_leaves(spec, is_leaf=is_leaf)
+    return int(sum(np.prod(p.shape) for p in leaves))

@@ -1,0 +1,107 @@
+"""Pure-SSM LM (mamba2-130m): embedding -> L x Mamba2/SSD blocks -> head.
+
+Attention-free: the paper's flash-attention-style tuning is inapplicable;
+the SSD chunk size takes its place as the tuned kernel dimension
+(DESIGN.md section 4).  Sub-quadratic -> runs long_500k.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .decoder import _maybe_remat
+from .layers import COMPUTE_DTYPE, embed, lm_logits, rms_norm
+from .mamba2 import SSMDims, mamba2_decode, mamba2_forward
+from ..sharding.constrain import (
+    constrain_residual,
+    gather_layer_weights,
+    strip_layer_axis,
+)
+from .param import P, param_axes
+
+
+def ssm_dims(cfg: ArchConfig) -> SSMDims:
+    s = cfg.ssm
+    return SSMDims(
+        d_model=cfg.d_model,
+        d_state=s.d_state,
+        d_conv=s.d_conv,
+        expand=s.expand,
+        head_dim=s.head_dim,
+        n_groups=s.n_groups,
+        chunk=s.chunk,
+    )
+
+
+def mamba_layer_spec(L: int, dims: SSMDims) -> dict:
+    return {
+        "pre_norm": P((L, dims.d_model), ("layers", "embed"), init="ones"),
+        "in_proj": P((L, dims.d_model, dims.in_proj_dim),
+                     ("layers", "embed", "ssm_inner"), init="scaled"),
+        "conv_w": P((L, dims.d_conv, dims.conv_dim),
+                    ("layers", None, "ssm_inner"), init="scaled"),
+        "dt_bias": P((L, dims.n_heads), ("layers", "heads"), init="zeros"),
+        "a_log": P((L, dims.n_heads), ("layers", "heads"), init="zeros"),
+        "d_skip": P((L, dims.n_heads), ("layers", "heads"), init="ones"),
+        "norm": P((L, dims.d_inner), ("layers", "ssm_inner"), init="ones"),
+        "out_proj": P((L, dims.d_inner, dims.d_model),
+                      ("layers", "ssm_inner", "embed"), init="scaled"),
+    }
+
+
+class SSMLM:
+    def __init__(self, cfg: ArchConfig, moe_groups: int = 1):
+        self.cfg = cfg
+        self.dims = ssm_dims(cfg)
+
+    def spec(self) -> dict:
+        c = self.cfg
+        return {
+            "embed": P((c.vocab, c.d_model), ("vocab", "embed")),
+            "layers": mamba_layer_spec(c.n_layers, self.dims),
+            "final_norm": P((c.d_model,), ("embed",), init="ones"),
+            "lm_head": P((c.d_model, c.vocab), ("embed", "vocab")),
+        }
+
+    def forward(self, params, tokens, remat: str = "none"):
+        x = embed(tokens, params["embed"])
+        layer_axes = strip_layer_axis(param_axes(self.spec()["layers"]))
+
+        def block(x, lp):
+            lp = gather_layer_weights(lp, layer_axes)
+            h = rms_norm(x, lp["pre_norm"])
+            return constrain_residual(x + mamba2_forward(h, lp, self.dims)), jnp.float32(0.0)
+
+        block = _maybe_remat(block, remat)
+        x, _ = jax.lax.scan(block, x, params["layers"])
+        x = rms_norm(x, params["final_norm"])
+        return lm_logits(x, params["lm_head"]), jnp.float32(0.0)
+
+    def cache_axes(self) -> dict:
+        return {
+            "conv": ("layers", "batch", None, "ssm_inner"),
+            "ssm": ("layers", "batch", "heads", None, None),
+        }
+
+    def init_cache(self, batch: int, max_len: int):
+        d = self.dims
+        L = self.cfg.n_layers
+        return {
+            "conv": jnp.zeros((L, batch, d.d_conv - 1, d.conv_dim), COMPUTE_DTYPE),
+            "ssm": jnp.zeros((L, batch, d.n_heads, d.head_dim, d.d_state), jnp.float32),
+        }
+
+    def decode_step(self, params, cache, cache_len, tokens):
+        x = embed(tokens, params["embed"])
+
+        def block(x, scan_in):
+            lp, cache_l = scan_in
+            h = rms_norm(x, lp["pre_norm"])
+            out, new_cache = mamba2_decode(h, lp, self.dims, cache_l)
+            return x + out, new_cache
+
+        x, new_cache = jax.lax.scan(block, x, (params["layers"], cache))
+        x = rms_norm(x, params["final_norm"])
+        return lm_logits(x, params["lm_head"]), new_cache

@@ -1,0 +1,18 @@
+from .fault_tolerance import (
+    InjectedFailure,
+    RunnerConfig,
+    RunnerReport,
+    StragglerEvent,
+    TrainingRunner,
+)
+from .elastic import degraded_mesh, reshard
+
+__all__ = [
+    "InjectedFailure",
+    "RunnerConfig",
+    "RunnerReport",
+    "StragglerEvent",
+    "TrainingRunner",
+    "degraded_mesh",
+    "reshard",
+]

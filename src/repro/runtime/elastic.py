@@ -1,0 +1,45 @@
+"""Elastic rescaling: move a train state between meshes.
+
+Shardings in this framework are *derived* (logical axes x rules x mesh),
+never stored — so elastic scale-down/up is: build the new mesh, recompute
+shardings, device_put the restored state.  ``reshard`` implements that;
+``degraded_mesh`` builds the standard fallback meshes (lose a pod -> single
+pod; lose data rows -> shrink the data axis) used by the elasticity test
+and the multi-pod runbook in launch/.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from ..sharding.rules import ShardingRules
+
+
+def degraded_mesh(devices: np.ndarray, lost_fraction: float = 0.5) -> Mesh:
+    """Rebuild the largest (data, model) mesh from surviving devices."""
+    devs = devices.reshape(-1)
+    n = len(devs)
+    keep = max(1, int(n * (1.0 - lost_fraction)))
+    # largest power-of-two split
+    model = 1
+    while model * 2 <= min(16, keep) and keep % (model * 2) == 0:
+        model *= 2
+    data = keep // model
+    return Mesh(devs[:keep].reshape(data, model), ("data", "model"))
+
+
+def reshard(state, axes_tree, rules: ShardingRules, new_mesh: Mesh):
+    """device_put every leaf with shardings recomputed for ``new_mesh``."""
+
+    def one(axes, leaf):
+        sh = rules.sharding_for(tuple(axes), leaf.shape, new_mesh)
+        return jax.device_put(leaf, sh)
+
+    return jax.tree_util.tree_map(
+        one, axes_tree, state,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x
+        ),
+    )

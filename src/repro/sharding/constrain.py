@@ -1,0 +1,106 @@
+"""Activation sharding constraints (sequence-parallel residual stream).
+
+Between layers the residual stream x (B, S, D) is constrained to
+    B -> (pod, data),  S -> model,  D -> replicated
+i.e. Megatron-style sequence parallelism: scan-saved residuals shrink by
+the TP degree (without this, 48 x (8, 4096, 8192) bf16 carries = 24 GB/chip
+on chameleon train_4k — over v5e HBM).  XLA inserts the all-gather before
+attention (which needs the full sequence) and the reduce-scatter after the
+output projection.
+
+``constrain`` is a no-op when no mesh context is active (CPU smoke tests)
+or when the dim does not divide the axis, so model code can call it
+unconditionally.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec
+
+
+def _active_mesh():
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    try:
+        from jax.interpreters import pxla
+
+        m = pxla.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+#: §Perf H4 — FSDP weight-gather mode.  XLA's SPMD partitioner sometimes
+#: contracts einsums against the FSDP-sharded weight dim and ALL-REDUCES the
+#: activation-sized partial sums (e.g. 86 GB/device/layer fp32 on olmoe
+#: train_4k) instead of all-gathering the far smaller weights.  When this
+#: flag is on, models constrain each layer's weights — cast to bf16 — to
+#: their sharding WITHOUT the data axis at the top of the scan body, which
+#: forces a (cheap, bf16) weight all-gather and makes every contraction
+#: local.  Toggled by benchmarks/hillclimb.py; default off (baseline).
+FSDP_GATHER_WEIGHTS = False
+
+
+def gather_layer_weights(lp_tree, axes_tree):
+    """Constrain per-layer weights to a no-data-axis sharding (see above).
+
+    axes_tree: logical axes per leaf with the leading "layers" dim already
+    stripped.  No-op without an active mesh or when the flag is off.
+    """
+    if not FSDP_GATHER_WEIGHTS:
+        return lp_tree
+    mesh = _active_mesh()
+    if mesh is None:
+        return lp_tree
+    from jax import numpy as jnp
+
+    from .rules import ShardingRules
+
+    rules = ShardingRules().with_overrides(embed=())
+
+    def one(axes, p):
+        v = p.astype(jnp.bfloat16) if p.dtype == jnp.float32 else p
+        spec = rules.spec_for(tuple(axes), v.shape, mesh)
+        return jax.lax.with_sharding_constraint(v, spec)
+
+    return jax.tree_util.tree_map(
+        one, axes_tree, lp_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x
+        ),
+    )
+
+
+def strip_layer_axis(axes_tree):
+    """('layers', a, b, ...) -> (a, b, ...) for every leaf."""
+    return jax.tree_util.tree_map(
+        lambda axes: tuple(a for a in axes if a != "layers"),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x
+        ),
+    )
+
+
+def constrain_residual(x):
+    """x: (B, S, D) residual stream -> batch/data + sequence/model."""
+    mesh = _active_mesh()
+    if mesh is None or x.ndim != 3:
+        return x
+    b, s, _ = x.shape
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    nb = int(np.prod([mesh.shape[a] for a in batch_axes])) if batch_axes else 1
+    parts: list = [None, None, None]
+    if batch_axes and b % nb == 0:
+        parts[0] = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    if "model" in mesh.axis_names and s > 1 and s % mesh.shape["model"] == 0:
+        parts[1] = "model"
+    return jax.lax.with_sharding_constraint(x, PartitionSpec(*parts))

@@ -1,0 +1,145 @@
+"""Training and serving step functions.
+
+``make_train_step`` builds a pjit-able (state, batch) -> (state, metrics)
+with:
+  * bf16 compute / fp32 master params & optimizer state,
+  * selectable remat policy ("none" | "dots" | "full") applied to the
+    scanned layer block,
+  * gradient accumulation over ``accum`` microbatches (lax.scan) with a
+    single optimizer update — one gradient all-reduce per step, not per
+    microbatch (collective hygiene, DESIGN.md section 5),
+  * MoE auxiliary load-balancing loss.
+
+``make_prefill_step`` / ``make_decode_step`` are the serving entry points
+(forward logits only / one token against a KV cache).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..optim.adamw import AdamWConfig, apply_updates, init_state
+
+
+@dataclass(frozen=True)
+class TrainSettings:
+    remat: str = "dots"
+    accum: int = 1               # gradient-accumulation microbatches
+    aux_weight: float = 0.01     # MoE load-balance loss weight
+    optimizer: AdamWConfig = AdamWConfig()
+    #: cast fp32 master params to bf16 ONCE before the layer scan, so the
+    #: per-layer FSDP all-gathers move bf16 instead of fp32 (EXPERIMENTS.md
+    #: §Perf H1 — halves weight-gather traffic).  Off by default: the
+    #: baseline casts inside each layer, which is what naive implementations
+    #: do and what the paper-faithful baseline measures.
+    cast_bf16: bool = False
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token NLL in fp32.  logits (B, S, V), labels (B, S) int32."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    picked = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1
+    )[..., 0]
+    return (lse - picked).mean()
+
+
+def _cast_tree_bf16(params):
+    return jax.tree_util.tree_map(
+        lambda p: p.astype(jnp.bfloat16) if p.dtype == jnp.float32 else p, params
+    )
+
+
+def make_loss_fn(model, settings: TrainSettings):
+    def loss_fn(params, batch):
+        if settings.cast_bf16:
+            params = _cast_tree_bf16(params)
+        if isinstance(batch, dict) and "src_embeds" in batch:   # enc-dec
+            logits, aux = model.forward(params, batch, remat=settings.remat)
+            labels = batch["dec_labels"]
+        else:
+            logits, aux = model.forward(
+                params, batch["tokens"], remat=settings.remat
+            )
+            labels = batch["labels"]
+        loss = cross_entropy(logits, labels)
+        return loss + settings.aux_weight * aux, (loss, aux)
+
+    return loss_fn
+
+
+def init_train_state(model, params) -> dict:
+    return {"params": params, "opt": init_state(params)}
+
+
+def make_train_step(model, settings: TrainSettings, grad_shardings=None):
+    """``grad_shardings``: optional tree of NamedShardings matching params.
+    Without it XLA can leave the scan-backward gradient accumulator
+    replicated (a full fp32 copy of the model per device — 27 GiB/chip on
+    olmoe); constraining the cotangents to the parameter shardings pushes
+    the sharding into the scan transpose."""
+    loss_fn = make_loss_fn(model, settings)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def constrain_grads(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, grads, grad_shardings
+        )
+
+    def train_step(state: dict, batch: dict):
+        params = state["params"]
+        if settings.accum == 1:
+            (total, (loss, aux)), grads = grad_fn(params, batch)
+            grads = constrain_grads(grads)
+        else:
+            a = settings.accum
+
+            def micro(carry, mb):
+                (t, (l, x)), g = grad_fn(params, mb)
+                g = constrain_grads(g)
+                grads_acc = jax.tree_util.tree_map(jnp.add, carry[0], g)
+                return (grads_acc, carry[1] + l, carry[2] + x), ()
+
+            mbs = jax.tree_util.tree_map(
+                lambda t: t.reshape((a, t.shape[0] // a) + t.shape[1:]), batch
+            )
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss, aux), _ = jax.lax.scan(
+                micro, (zero_g, jnp.float32(0), jnp.float32(0)), mbs
+            )
+            grads = jax.tree_util.tree_map(lambda g: g / a, grads)
+            loss, aux = loss / a, aux / a
+
+        new_params, new_opt, om = apply_updates(
+            params, grads, state["opt"], settings.optimizer
+        )
+        metrics = {"loss": loss, "aux": aux, **om}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(model, remat: str = "none"):
+    def prefill_step(params, batch):
+        if isinstance(batch, dict) and "src_embeds" in batch:
+            enc_out = model.encode(params, batch["src_embeds"], remat=remat)
+            return model.decode_train(params, enc_out, batch["dec_tokens"], remat=remat)
+        logits, _ = model.forward(params, batch["tokens"], remat=remat)
+        return logits
+
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, cache, cache_len, tokens):
+        return model.decode_step(params, cache, cache_len, tokens)
+
+    return decode_step

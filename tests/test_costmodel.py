@@ -1,0 +1,95 @@
+"""Analytical TPU cost model: scalar/batch agreement (property-tested),
+executability constraint, architecture sensitivity."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import paper_space
+from repro.costmodel import (
+    CHIPS,
+    FAILURE_RUNTIME,
+    WORKLOADS,
+    CostModelMeasurement,
+    executable_space,
+    is_executable,
+    runtime_model,
+    runtime_model_batch,
+    true_optimum,
+    vmem_bytes,
+)
+
+cfg_strategy = st.fixed_dictionaries({
+    "t_x": st.integers(1, 16),
+    "t_y": st.integers(1, 16),
+    "t_z": st.integers(1, 16),
+    "w_x": st.integers(1, 8),
+    "w_y": st.integers(1, 8),
+    "w_z": st.integers(1, 8),
+})
+
+
+@given(cfg_strategy, st.sampled_from(sorted(WORKLOADS)), st.sampled_from(sorted(CHIPS)))
+@settings(max_examples=150, deadline=None)
+def test_scalar_and_batch_models_agree(cfg, wname, cname):
+    w, chip = WORKLOADS[wname], CHIPS[cname]
+    scalar = runtime_model(w, chip, cfg)
+    row = np.array([[cfg["t_x"], cfg["t_y"], cfg["t_z"],
+                     cfg["w_x"], cfg["w_y"], cfg["w_z"]]], dtype=float)
+    batch = runtime_model_batch(w, chip, row)[0]
+    assert scalar == pytest.approx(batch, rel=1e-12)
+
+
+@given(cfg_strategy)
+@settings(max_examples=80, deadline=None)
+def test_invalid_configs_get_failure_penalty(cfg):
+    w, chip = WORKLOADS["harris"], CHIPS["v3"]   # smallest VMEM
+    if not is_executable(w, chip, cfg):
+        assert runtime_model(w, chip, cfg) == FAILURE_RUNTIME
+    else:
+        assert runtime_model(w, chip, cfg) < FAILURE_RUNTIME
+
+
+def test_vmem_grows_with_block_and_depth():
+    w = WORKLOADS["add"]
+    small = dict(t_x=1, t_y=1, t_z=1, w_x=1, w_y=1, w_z=1)
+    assert vmem_bytes(w, dict(small, t_x=8)) > vmem_bytes(w, small)
+    assert vmem_bytes(w, dict(small, w_z=4)) > vmem_bytes(w, small)
+
+
+def test_executable_space_only_yields_valid(space_seed=0):
+    w, chip = WORKLOADS["add"], CHIPS["v3"]
+    space = executable_space(w, chip)
+    rng = np.random.default_rng(space_seed)
+    for cfg in space.sample_batch(rng, 100):
+        assert is_executable(w, chip, cfg)
+
+
+def test_optima_differ_across_chips():
+    """Same benchmark, different architecture -> different optimum config
+    (the paper's performance-portability premise)."""
+    w = WORKLOADS["add"]
+    cfgs = {c: true_optimum(w, CHIPS[c])[0] for c in CHIPS}
+    assert cfgs["v5e"] != cfgs["v3"] or cfgs["v4"] != cfgs["v3"]
+
+
+def test_measurement_noise_and_final_median():
+    w, chip = WORKLOADS["harris"], CHIPS["v5e"]
+    cfg = dict(t_x=2, t_y=8, t_z=4, w_x=1, w_y=1, w_z=2)
+    m = CostModelMeasurement(w, chip, seed=0)
+    draws = [m.measure(cfg) for _ in range(50)]
+    assert np.std(draws) > 0  # noisy during search
+    base = runtime_model(w, chip, cfg)
+    final = m.measure_final(cfg, repeats=10)
+    assert abs(final / base - 1.0) < 0.15
+    noiseless = CostModelMeasurement(w, chip, seed=0, noise=False)
+    assert noiseless.measure(cfg) == base
+
+
+def test_memory_bound_add_insensitive_to_wz_overlap():
+    """add is HBM-bound: double-buffering cannot beat the DMA floor."""
+    w, chip = WORKLOADS["add"], CHIPS["v5e"]
+    base = dict(t_x=4, t_y=16, t_z=16, w_x=1, w_y=1)
+    t1 = runtime_model(w, chip, dict(base, w_z=1))
+    t2 = runtime_model(w, chip, dict(base, w_z=2))
+    assert t2 > t1 * 0.9  # no dramatic win from overlap

@@ -1,0 +1,79 @@
+"""Pallas kernels vs pure-jnp oracles across shape/dtype/config sweeps
+(interpret mode on CPU; same pallas_call lowers to Mosaic on TPU)."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import (
+    add,
+    add_ref,
+    harris,
+    harris_ref,
+    mandelbrot,
+    mandelbrot_ref,
+)
+
+CONFIGS = [
+    {},                                                   # defaults
+    dict(t_x=2, t_y=1, t_z=2, w_x=2, w_y=2, w_z=2),
+    dict(t_x=1, t_y=2, t_z=3, w_x=3, w_y=1, w_z=1),
+    dict(t_x=4, t_y=1, t_z=1, w_x=1, w_y=4, w_z=4),
+]
+
+SHAPES = [(64, 128), (128, 256), (96, 384), (40, 128)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("cfg", CONFIGS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_add_matches_ref(shape, cfg, dtype):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=shape), dtype)
+    b = jnp.asarray(rng.normal(size=shape), dtype)
+    out = add(a, b, cfg)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(add_ref(a, b), np.float32),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("cfg", CONFIGS)
+def test_harris_matches_ref(shape, cfg):
+    rng = np.random.default_rng(1)
+    img = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    out = np.asarray(harris(img, cfg))
+    ref = np.asarray(harris_ref(img))
+    denom = np.abs(ref).max()
+    assert np.abs(out - ref).max() / denom < 1e-5
+
+
+@pytest.mark.parametrize("shape", [(64, 128), (96, 256), (50, 130)])
+@pytest.mark.parametrize("cfg", CONFIGS)
+def test_mandelbrot_matches_ref(shape, cfg):
+    """Escape-iteration counts are chaotic at the set boundary: FMA
+    contraction differences legitimately move a handful of pixels by a few
+    iterations -> 'discrete boundary' tolerance: >=99.5% exact, violations
+    within +-4."""
+    x, y = shape
+    out = np.asarray(mandelbrot(x, y, cfg))
+    ref = np.asarray(mandelbrot_ref(x, y))
+    exact = (out == ref).mean()
+    assert exact >= 0.995, exact
+    assert np.abs(out - ref).max() <= 4
+
+
+def test_mandelbrot_interior_is_max_iter():
+    out = np.asarray(mandelbrot(64, 64, max_iter=32))
+    # the middle of the classic view contains the set -> full iteration count
+    assert out.max() == 32
+
+
+def test_add_odd_shapes_pad_correctly():
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.normal(size=(56, 200)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(56, 200)), jnp.float32)
+    out = add(a, b, dict(t_x=3, t_y=1, t_z=2, w_x=2, w_y=3))
+    np.testing.assert_allclose(out, a + b, rtol=1e-6)

@@ -1,0 +1,101 @@
+"""Searcher behaviour: budget exactness, determinism, constraint handling,
+and relative quality on a smooth objective."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CallableMeasurement,
+    PAPER_ALGORITHMS,
+    EXTRA_ALGORITHMS,
+    make_searcher,
+    paper_space,
+)
+
+ALL = PAPER_ALGORITHMS + EXTRA_ALGORITHMS
+
+
+def smooth(cfg):
+    x = np.array([cfg["t_x"] / 16, cfg["t_y"] / 16, cfg["t_z"] / 16,
+                  cfg["w_x"] / 8, cfg["w_y"] / 8, cfg["w_z"] / 8])
+    target = np.array([0.5, 0.75, 0.25, 0.6, 0.9, 0.3])
+    return 1.0 + float(((x - target) ** 2).sum())
+
+
+@pytest.fixture(scope="module")
+def space():
+    return paper_space()
+
+
+@pytest.mark.parametrize("algo", ALL)
+@pytest.mark.parametrize("budget", [5, 25, 60])
+def test_budget_never_exceeded(space, algo, budget):
+    m = CallableMeasurement(smooth)
+    r = make_searcher(algo, space, seed=0).run(m, budget)
+    assert r.n_samples <= budget
+    assert m.n_samples <= budget
+    assert np.isfinite(r.best_value)
+    assert set(r.best_config) == set(space.names)
+
+
+@pytest.mark.parametrize("algo", ALL)
+def test_deterministic_given_seed(space, algo):
+    r1 = make_searcher(algo, space, seed=7).run(CallableMeasurement(smooth), 40)
+    r2 = make_searcher(algo, space, seed=7).run(CallableMeasurement(smooth), 40)
+    assert r1.best_value == r2.best_value
+    assert r1.best_config == r2.best_config
+
+
+@pytest.mark.parametrize("algo", ("rs", "rf", "ga", "sa", "pso", "grid"))
+def test_constrained_searchers_respect_constraint(space, algo):
+    seen = []
+
+    def f(cfg):
+        seen.append(cfg)
+        return smooth(cfg)
+
+    make_searcher(algo, space, seed=1).run(CallableMeasurement(f), 40)
+    for cfg in seen:
+        assert cfg["w_x"] * cfg["w_y"] * cfg["w_z"] <= 256
+
+
+def test_smbo_ignores_constraints(space):
+    """Paper section V.C: SMBO methods search the raw space."""
+    s = make_searcher("bo_tpe", space, seed=0)
+    assert s.space.constraint is None
+    s = make_searcher("bo_gp", space, seed=0)
+    assert s.space.constraint is None
+
+
+def test_advanced_beat_random_on_smooth_objective(space):
+    """On a smooth bowl with a healthy budget, BO/GA should beat RS on
+    median over repeats (the paper's core expectation at S=100)."""
+    def median_best(algo, n_rep=7, budget=100):
+        vals = []
+        for seed in range(n_rep):
+            m = CallableMeasurement(smooth)
+            vals.append(make_searcher(algo, space, seed=seed).run(m, budget).best_value)
+        return float(np.median(vals))
+
+    rs = median_best("rs")
+    assert median_best("bo_gp") < rs
+    assert median_best("bo_tpe") < rs
+    assert median_best("ga") <= rs * 1.02  # GA at least matches RS here
+
+
+def test_trajectory_monotone(space):
+    m = CallableMeasurement(smooth)
+    r = make_searcher("ga", space, seed=3).run(m, 60)
+    traj = r.trajectory()
+    assert (np.diff(traj) <= 1e-12).all()
+
+
+def test_rf_result_comes_from_predictions(space):
+    """Paper: RF stores the best of the 10 *predictions*, not the best
+    training sample."""
+    m = CallableMeasurement(smooth)
+    s = make_searcher("rf", space, seed=5)
+    r = s.run(m, 50)
+    # best_value must equal one of the last 10 history entries
+    tail = r.history_values[-10:]
+    assert min(tail) == r.best_value

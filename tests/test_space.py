@@ -1,0 +1,90 @@
+"""Property tests for the search space (hypothesis)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Param, SearchSpace, paper_space
+
+
+def test_paper_space_cardinality():
+    assert paper_space().cardinality == 2_097_152  # 16^3 * 8^3, as in the paper
+
+
+def test_constraint_matches_paper_rule():
+    space = paper_space(constrained=True)
+    rng = np.random.default_rng(0)
+    for cfg in space.sample_batch(rng, 200):
+        assert cfg["w_x"] * cfg["w_y"] * cfg["w_z"] <= 256
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 64))
+@settings(max_examples=25, deadline=None)
+def test_sample_within_bounds(seed, n):
+    space = paper_space(constrained=False)
+    rng = np.random.default_rng(seed)
+    idx = space.sample_indices(rng, n)
+    assert idx.shape == (n, 6)
+    assert (idx >= 0).all()
+    assert (idx < space.cardinalities).all()
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_encode_decode_roundtrip(seed):
+    space = paper_space(constrained=False)
+    rng = np.random.default_rng(seed)
+    idx = space.sample_indices(rng, 8)
+    for row in idx:
+        cfg = space.decode(row)
+        np.testing.assert_array_equal(space.encode(cfg), row)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_flat_keys_unique_and_consistent(seed):
+    space = paper_space(constrained=False)
+    rng = np.random.default_rng(seed)
+    idx = space.sample_indices(rng, 256)
+    keys = space.flat_keys(idx)
+    uniq_rows = len({tuple(r) for r in idx.tolist()})
+    assert len(set(keys.tolist())) == uniq_rows
+    assert (keys >= 0).all() and (keys < space.cardinality).all()
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.0, 1.0))
+@settings(max_examples=20, deadline=None)
+def test_mutate_batch_matches_bounds(seed, p):
+    space = paper_space(constrained=False)
+    rng = np.random.default_rng(seed)
+    base = space.sample_indices(rng, 1)[0]
+    out = space.mutate_batch(rng, base, p, 64)
+    assert out.shape == (64, 6)
+    assert (out >= 0).all() and (out < space.cardinalities).all()
+    if p == 0.0:
+        assert (out == base).all()
+
+
+def test_unit_cube_roundtrip():
+    space = paper_space(constrained=False)
+    rng = np.random.default_rng(3)
+    idx = space.sample_indices(rng, 100)
+    u = space.to_unit(idx)
+    assert (u > 0).all() and (u < 1).all()
+    np.testing.assert_array_equal(space.from_unit(u), idx)
+
+
+def test_neighbor_moves_one_axis():
+    space = paper_space(constrained=False)
+    rng = np.random.default_rng(0)
+    idx = space.sample_indices(rng, 1)[0]
+    for _ in range(50):
+        nxt = space.neighbor(rng, idx)
+        diff = (nxt != idx).sum()
+        assert diff <= 1
+        assert (nxt >= 0).all() and (nxt < space.cardinalities).all()
+
+
+def test_duplicate_param_names_rejected():
+    with pytest.raises(ValueError):
+        SearchSpace([Param.int_range("a", 1, 4), Param.int_range("a", 1, 2)])

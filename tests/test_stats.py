@@ -1,0 +1,80 @@
+"""Statistics layer vs scipy + CLES identities (paper section II.C)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import stats
+
+scipy_stats = pytest.importorskip("scipy.stats")
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(5, 60), st.integers(5, 60))
+@settings(max_examples=40, deadline=None)
+def test_mwu_matches_scipy(seed, n_a, n_b):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(0, 1, n_a)
+    b = rng.normal(0.3, 1.2, n_b)
+    ours = stats.mann_whitney_u(a, b)
+    ref = scipy_stats.mannwhitneyu(a, b, alternative="two-sided",
+                                   method="asymptotic", use_continuity=True)
+    assert ours.u == pytest.approx(ref.statistic)
+    assert ours.p_value == pytest.approx(ref.pvalue, rel=1e-6)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_mwu_with_ties_matches_scipy(seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 5, 30).astype(float)
+    b = rng.integers(0, 5, 25).astype(float)
+    ours = stats.mann_whitney_u(a, b)
+    ref = scipy_stats.mannwhitneyu(a, b, alternative="two-sided",
+                                   method="asymptotic", use_continuity=True)
+    assert ours.p_value == pytest.approx(ref.pvalue, rel=1e-6)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(3, 40), st.integers(3, 40))
+@settings(max_examples=40, deadline=None)
+def test_cles_equals_pairwise_definition(seed, n_a, n_b):
+    """Rank-based CLES == brute-force  P(A > B) + 0.5 P(A == B)  (eq. 1)."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 8, n_a).astype(float)
+    b = rng.integers(0, 8, n_b).astype(float)
+    brute = np.mean((a[:, None] > b[None, :]) + 0.5 * (a[:, None] == b[None, :]))
+    assert stats.cles(a, b) == pytest.approx(brute)
+
+
+def test_cles_symmetry():
+    rng = np.random.default_rng(1)
+    a, b = rng.normal(size=20), rng.normal(size=30)
+    assert stats.cles(a, b) + stats.cles(b, a) == pytest.approx(1.0)
+
+
+def test_cles_lower_better_direction():
+    fast = np.array([1.0, 1.1, 0.9])
+    slow = np.array([2.0, 2.1, 1.9])
+    # fast algorithm beats slow with probability 1
+    assert stats.cles_lower_better(fast, slow) == pytest.approx(1.0)
+    assert stats.cles_lower_better(slow, fast) == pytest.approx(0.0)
+
+
+def test_median_speedup():
+    assert stats.median_speedup(np.array([2.0, 2.0]), np.array([1.0, 1.0])) == 2.0
+
+
+def test_pct_of_optimum():
+    out = stats.pct_of_optimum(np.array([2.0, 1.0]), optimum=1.0)
+    np.testing.assert_allclose(out, [50.0, 100.0])
+
+
+def test_significance_threshold_is_papers():
+    assert stats.ALPHA == 0.01
+
+
+def test_compare_algorithms_keys():
+    rng = np.random.default_rng(0)
+    out = stats.compare_algorithms(rng.normal(1, 0.1, 50), rng.normal(1.2, 0.1, 50))
+    assert set(out) >= {"median_a", "median_b", "speedup_a_over_b",
+                        "cles_a_beats_b", "mwu_p", "significant"}
+    assert out["significant"]  # clearly separated populations

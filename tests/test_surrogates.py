@@ -1,0 +1,123 @@
+"""Surrogate models: reference forest vs batched forest, GP sanity."""
+
+import numpy as np
+import pytest
+
+from repro.core import paper_space
+from repro.core.surrogates import GaussianProcess, RandomForestRegressor, RegressionTree
+from repro.core.surrogates.forest_batched import BatchedForest
+from repro.core.surrogates.gp import expected_improvement, matern52
+
+
+@pytest.fixture(scope="module")
+def space():
+    return paper_space(constrained=False)
+
+
+def _toy(X):
+    return (X[:, 0] - 8.0) ** 2 + 3.0 * X[:, 3] + 0.5 * X[:, 1]
+
+
+def test_tree_fits_exactly_on_training_data():
+    rng = np.random.default_rng(0)
+    X = rng.integers(0, 10, size=(60, 3)).astype(float)
+    y = rng.normal(size=60)
+    # grown to purity, a CART tree memorizes distinct rows
+    tree = RegressionTree(rng=rng).fit(X, y)
+    pred = tree.predict(X)
+    # rows may repeat; group identical rows and compare means
+    key = [tuple(r) for r in X]
+    for k in set(key):
+        mask = np.array([kk == k for kk in key])
+        np.testing.assert_allclose(pred[mask], y[mask].mean(), atol=1e-9)
+
+
+def test_batched_forest_matches_reference(space):
+    rng = np.random.default_rng(1)
+    X = space.sample_indices(rng, 250)
+    y = _toy(X) + rng.normal(0, 0.05, len(X))
+    pool = space.sample_indices(rng, 400)
+    ref = RandomForestRegressor(n_estimators=40, seed=0).fit(X.astype(float), y)
+    bat = BatchedForest(space.cardinalities, n_estimators=40, seed=0).fit(X[None], y[None])
+    pr, pb = ref.predict(pool.astype(float)), bat.predict(pool)[0]
+    corr = np.corrcoef(pr, pb)[0, 1]
+    assert corr > 0.97, corr
+
+
+def test_batched_forest_multi_forest_independence(space):
+    """Forest g must depend only on its own training slice."""
+    rng = np.random.default_rng(2)
+    X = np.stack([space.sample_indices(rng, 60) for _ in range(3)])
+    y = np.stack([_toy(x) for x in X])
+    pool = space.sample_indices(rng, 128)
+    all3 = BatchedForest(space.cardinalities, n_estimators=20, seed=0).fit(X, y)
+    solo = BatchedForest(space.cardinalities, n_estimators=20, seed=0).fit(
+        X[1][None], y[1][None]
+    )
+    # bootstrap seeds differ between G=3 and G=1 fits, so compare quality,
+    # not bitwise equality: both should rank the pool nearly identically
+    p3 = all3.predict(pool)[1]
+    p1 = solo.predict(pool)[0]
+    true = _toy(pool)
+    assert np.corrcoef(p3, true)[0, 1] > 0.9
+    assert np.corrcoef(p1, true)[0, 1] > 0.9
+
+
+def test_batched_forest_learns_signal(space):
+    rng = np.random.default_rng(3)
+    X = space.sample_indices(rng, 300)
+    y = _toy(X)
+    pool = space.sample_indices(rng, 300)
+    bat = BatchedForest(space.cardinalities, n_estimators=50, seed=1).fit(X[None], y[None])
+    pred = bat.predict(pool)[0]
+    assert np.corrcoef(pred, _toy(pool))[0, 1] > 0.98
+
+
+def test_gp_interpolates_and_uncertainty_grows():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(0, 1, size=(30, 2))
+    y = np.sin(4 * X[:, 0]) + X[:, 1]
+    gp = GaussianProcess()
+    gp.fit(X, y)
+    mu, sigma = gp.predict(X)
+    np.testing.assert_allclose(mu, y, atol=0.15)
+    far = np.array([[10.0, 10.0]])
+    _, sigma_far = gp.predict(far)
+    assert sigma_far[0] > sigma.mean()
+
+
+def test_gp_incremental_add_matches_batch_fit():
+    rng = np.random.default_rng(4)
+    X = rng.uniform(0, 1, size=(24, 3))
+    y = (X**2).sum(1)
+    batch = GaussianProcess()
+    batch.fit(X, y)
+    online = GaussianProcess()
+    # mirror the hyperparameters so only the Cholesky path differs
+    online.lengthscales = (batch.lengthscale,)
+    online.noises = (batch.noise,)
+    for x, v in zip(X, y):
+        online.add(x, v)
+    Xs = rng.uniform(0, 1, size=(16, 3))
+    mu_b, s_b = batch.predict(Xs)
+    mu_o, s_o = online.predict(Xs)
+    np.testing.assert_allclose(mu_o, mu_b, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(s_o, s_b, rtol=1e-4, atol=1e-6)
+
+
+def test_matern52_psd():
+    rng = np.random.default_rng(5)
+    X = rng.uniform(0, 1, size=(40, 4))
+    K = matern52(X, X, 0.5)
+    np.testing.assert_allclose(K, K.T, atol=1e-12)
+    w = np.linalg.eigvalsh(K)
+    assert w.min() > -1e-8
+
+
+def test_expected_improvement_properties():
+    mu = np.array([0.0, 1.0, 2.0])
+    sigma = np.array([1.0, 1.0, 1.0])
+    ei = expected_improvement(mu, sigma, best=1.0)
+    assert ei[0] > ei[1] > ei[2] > 0
+    # zero uncertainty, worse mean -> zero EI
+    assert expected_improvement(np.array([2.0]), np.array([1e-15]), 1.0)[0] == pytest.approx(0.0, abs=1e-12)
