@@ -1,0 +1,18 @@
+# Tier-1 verification (see ROADMAP.md): the full test suite must collect and
+# pass with or without the optional dev deps (hypothesis/scipy tests skip
+# themselves when absent).
+PYTHON ?= python
+
+.PHONY: test test-fast bench install-dev
+
+test:
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q
+
+test-fast:
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q tests/test_space.py tests/test_searchers.py tests/test_costmodel.py tests/test_stats.py tests/test_surrogates.py
+
+bench:
+	PYTHONPATH=src $(PYTHON) benchmarks/run.py --budget 100
+
+install-dev:
+	pip install -r requirements-dev.txt

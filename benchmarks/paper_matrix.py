@@ -21,7 +21,7 @@ import time
 
 import numpy as np
 
-from repro.core import ExperimentDesign, MatrixRunner, SampleDataset
+from repro.core import ExperimentDesign, MatrixRunner, MeasurementStore, SampleDataset
 from repro.costmodel import (
     CHIPS,
     WORKLOADS,
@@ -40,13 +40,33 @@ def combo_path(out_dir: str, bench: str, chip: str) -> str:
 
 
 def run_combo(bench: str, chip_name: str, design: ExperimentDesign, out_dir: str,
-              algorithms=ALGOS, seed: int = 0, verbose: bool = True) -> None:
+              algorithms=ALGOS, seed: int = 0, verbose: bool = True,
+              cache: bool = True, dispatch: str = "batch") -> None:
     w, chip = WORKLOADS[bench], CHIPS[chip_name]
     space = executable_space(w, chip)
     dataset = SampleDataset.generate(
-        space, CostModelMeasurement(w, chip, seed=GEN_SEED), n=20000, seed=DATASET_SEED
+        space,
+        CostModelMeasurement(w, chip, seed=GEN_SEED),
+        n=20000,
+        seed=DATASET_SEED,
+        # seeds in the filename: changing either invalidates the cache
+        cache_path=(
+            os.path.join(
+                out_dir,
+                f"{bench}_{chip_name}_dataset_s{DATASET_SEED}g{GEN_SEED}.npz",
+            )
+            if cache
+            else None
+        ),
     )
     opt_cfg, opt = true_optimum(w, chip)
+    # persistent (kernel, config) cache: re-running an interrupted combo
+    # serves every previously-measured cell from disk
+    store = (
+        MeasurementStore(os.path.join(out_dir, f"{bench}_{chip_name}_cache.json"))
+        if cache
+        else None
+    )
     runner = MatrixRunner(
         space,
         lambda s: CostModelMeasurement(w, chip, seed=s),
@@ -55,6 +75,9 @@ def run_combo(bench: str, chip_name: str, design: ExperimentDesign, out_dir: str
         algorithms=algorithms,
         seed=seed,
         verbose=verbose,
+        dispatch=dispatch,
+        store=store,
+        cache_key=f"{bench}/{chip_name}",
     )
     t0 = time.time()
     results = runner.run()

@@ -112,6 +112,9 @@ def main() -> None:
         print(f"  cfg={cfg} -> modelled step {s:.2f}s  (compile {time.time()-t0:.0f}s)")
         return s
 
+    # bo_tpe proposes single configs after its random init batch; the engine
+    # driver still routes each batch through measure_batch, and the memoizing
+    # wrapper collapses duplicate proposals before they reach a compile.
     m = CachedMeasurement(CallableMeasurement(measure))
     r = make_searcher("bo_tpe", space, seed=0).run(m, args.budget)
     print(f"\nbest distributed config for {args.arch} train_4k: {r.best_config}")

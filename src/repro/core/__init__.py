@@ -9,6 +9,12 @@ from .measurement import (
     CallableMeasurement,
     TimingMeasurement,
 )
+from .engine import (
+    DiskCachedMeasurement,
+    MeasurementStore,
+    config_key,
+    drive,
+)
 from .experiment import ExperimentDesign
 from .dataset import SampleDataset
 from .runner import CellResult, MatrixResults, MatrixRunner
@@ -31,6 +37,10 @@ __all__ = [
     "CachedMeasurement",
     "CallableMeasurement",
     "TimingMeasurement",
+    "DiskCachedMeasurement",
+    "MeasurementStore",
+    "config_key",
+    "drive",
     "ExperimentDesign",
     "SampleDataset",
     "CellResult",

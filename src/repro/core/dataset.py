@@ -7,10 +7,16 @@ size and experiment.'
 
 RS experiments draw disjoint chunks of S samples; RF experiments draw chunks
 of S-10 for training.  Chunking is deterministic given the dataset seed.
+
+Generation routes through ``measure_batch`` — on the vectorized cost-model
+backend the whole 20k-sample dataset is ONE Python-level dispatch — and can
+be persisted (``save``/``load`` or ``generate(..., cache_path=...)``) so a
+re-run of the same (kernel, seed) combo never re-measures it.
 """
 
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
 
 import numpy as np
@@ -32,11 +38,38 @@ class SampleDataset:
         measurement: BaseMeasurement,
         n: int = 20000,
         seed: int = 0,
+        cache_path: str | None = None,
     ) -> "SampleDataset":
         rng = np.random.default_rng(seed)
         idx = space.sample_indices(rng, n)
+        if cache_path is not None and os.path.exists(cache_path):
+            ds = cls.load(space, cache_path)
+            # the cache is only valid for this exact draw: same n, same
+            # sample seed, same space (a changed measurement seed writes a
+            # new file at the caller's discretion; a changed sample stream
+            # is detected here by index equality)
+            if len(ds) == n and np.array_equal(ds.indices, idx):
+                return ds
         vals = measurement.measure_batch(space.decode_batch(idx))
-        return cls(space=space, indices=idx, values=np.asarray(vals, dtype=np.float64))
+        ds = cls(space=space, indices=idx, values=np.asarray(vals, dtype=np.float64))
+        if cache_path is not None:
+            ds.save(cache_path)
+        return ds
+
+    def save(self, path: str) -> None:
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        # write through a file handle so the data lands at ``path`` exactly
+        # (np.savez_compressed appends '.npz' to bare string paths, which
+        # would break the generate() existence check)
+        with open(path, "wb") as f:
+            np.savez_compressed(f, indices=self.indices, values=self.values)
+
+    @classmethod
+    def load(cls, space: SearchSpace, path: str) -> "SampleDataset":
+        data = np.load(path, allow_pickle=False)
+        return cls(space=space, indices=data["indices"], values=data["values"])
 
     def __len__(self) -> int:
         return len(self.values)

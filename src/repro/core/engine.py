@@ -1,0 +1,216 @@
+"""Batched evaluation engine: drivers over the searcher ask/tell protocol
+plus a persistent on-disk measurement cache.
+
+The paper's experiment is a matrix of (algorithm x sample size x experiment)
+cells over a >2M-point space; its cost is dominated by evaluation dispatch.
+The engine separates *proposal* (searchers yield batches via ask/tell) from
+*evaluation* (a measurement backend serves a whole batch in one Python-level
+dispatch), and memoizes served values on disk keyed by (kernel, config) so
+re-running a matrix cell never re-measures.
+
+  drive(searcher, measurement, budget)        batched driver (the hot path)
+  drive(..., dispatch="one")                  sequential driver (parity audit)
+  MeasurementStore / DiskCachedMeasurement    persistent (kernel, config) cache
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Sequence
+
+import numpy as np
+
+from .measurement import BaseMeasurement
+from .space import Config
+from .searchers.base import Searcher, TuningResult
+
+DISPATCH_MODES = ("batch", "one")
+
+
+def drive(
+    searcher: Searcher,
+    measurement: BaseMeasurement,
+    budget: int,
+    dispatch: str = "batch",
+    batch_size: int | None = None,
+) -> TuningResult:
+    """Run ``searcher`` to completion against ``measurement``.
+
+    ``dispatch="batch"`` hands each proposal batch to ``measure_batch`` in
+    one call; ``dispatch="one"`` measures config-by-config.  Both consume the
+    same proposals in the same order, so for a dispatch-invariant backend the
+    histories are identical.  ``batch_size`` optionally caps how many configs
+    are asked per iteration (e.g. to bound a remote executor's batch).
+    """
+    if dispatch not in DISPATCH_MODES:
+        raise ValueError(f"dispatch must be one of {DISPATCH_MODES}")
+    searcher.start(budget)
+    while True:
+        configs = searcher.ask(batch_size)
+        if not configs:
+            break
+        if dispatch == "batch":
+            values = measurement.measure_batch(configs)
+        else:
+            values = np.array(
+                [measurement.measure(c) for c in configs], dtype=np.float64
+            )
+        searcher.tell(configs, values)
+    return searcher.finish()
+
+
+# ---------------------------------------------------------------- disk cache
+
+
+def config_key(config: Config) -> str:
+    """Canonical string key for a config dict (sorted, compact)."""
+    return ",".join(f"{k}={config[k]}" for k in sorted(config))
+
+
+class MeasurementStore:
+    """A persistent str -> float mapping backing :class:`DiskCachedMeasurement`.
+
+    One store (one JSON file) is shared by every measurement of a matrix run;
+    entries are namespaced by the wrapping measurement's ``prefix``.  Writes
+    are atomic (temp file + rename) so an interrupted run never corrupts the
+    cache.  ``autosave_every`` new entries trigger a flush; 0 disables
+    autosave (call :meth:`save` explicitly).
+    """
+
+    def __init__(self, path: str | None, autosave_every: int = 4096):
+        self.path = path
+        self.autosave_every = autosave_every
+        self._data: dict[str, float] = {}
+        self._dirty = 0
+        if path is not None and os.path.exists(path):
+            try:
+                with open(path) as f:
+                    self._data = {k: float(v) for k, v in json.load(f).items()}
+            except (json.JSONDecodeError, ValueError, OSError) as e:
+                # a cache is not a source of truth: a corrupt/truncated file
+                # (killed run, disk full) must degrade to a cold cache, not
+                # kill the matrix run
+                import warnings
+
+                warnings.warn(
+                    f"measurement cache {path!r} unreadable ({e}); starting cold"
+                )
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def get(self, key: str) -> float | None:
+        return self._data.get(key)
+
+    def put(self, key: str, value: float) -> None:
+        self._data[key] = float(value)
+        self._dirty += 1
+        if self.autosave_every and self._dirty >= self.autosave_every:
+            self.save()
+
+    def save(self) -> None:
+        if self.path is None:
+            return
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d or ".", suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self._data, f)
+            os.replace(tmp, self.path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        self._dirty = 0
+
+
+class DiskCachedMeasurement(BaseMeasurement):
+    """Serves measurements from a :class:`MeasurementStore`, falling back to
+    (and recording) the inner measurement on miss.
+
+    Keys are ``{prefix}|{config_key}`` — the prefix identifies the kernel /
+    chip / experiment stream (e.g. ``"harris/v5e/seed=123"``), so repeated
+    runs of the same matrix cell are served entirely from disk while distinct
+    noise streams never collide.
+
+    Budget accounting: ``n_samples`` counts every sample *served* (hit or
+    miss), so searcher budget audits are identical whether the cache is cold
+    or warm; ``n_misses`` counts actual inner measurements.
+    """
+
+    def __init__(self, inner: BaseMeasurement, store: MeasurementStore, prefix: str):
+        super().__init__()
+        self._inner = inner
+        self._store = store
+        self.prefix = prefix
+        self.n_misses = 0
+
+    def _key(self, config: Config) -> str:
+        return f"{self.prefix}|{config_key(config)}"
+
+    def measure(self, config: Config) -> float:
+        self.n_samples += 1
+        self.n_dispatches += 1
+        k = self._key(config)
+        v = self._store.get(k)
+        if v is None:
+            v = self._inner.measure(config)
+            self.n_misses += 1
+            self._store.put(k, v)
+        else:
+            self._inner.skip_samples(1)
+        return float(v)
+
+    def measure_batch(self, configs: Sequence[Config]) -> np.ndarray:
+        self.n_samples += len(configs)
+        self.n_dispatches += 1
+        keys = [self._key(c) for c in configs]
+        cached = [self._store.get(k) for k in keys]
+        vals = np.array(
+            [np.nan if v is None else v for v in cached], dtype=np.float64
+        )
+        miss = np.array([v is None for v in cached], dtype=bool)
+        if not miss.any():
+            self._inner.skip_samples(len(configs))
+            return vals
+        # Walk the batch in contiguous hit/miss runs so the inner backend's
+        # per-sample state (noise counters) stays aligned with a cold run:
+        # hits advance it via skip_samples, misses via measure_batch, in the
+        # batch's own order.
+        i = 0
+        n = len(configs)
+        while i < n:
+            j = i
+            while j < n and miss[j] == miss[i]:
+                j += 1
+            if miss[i]:
+                fresh_cfgs = list(configs[i:j])
+                fresh = self._inner.measure_batch(fresh_cfgs)
+                self.n_misses += len(fresh_cfgs)
+                vals[i:j] = fresh
+                for k, v in zip(keys[i:j], fresh):
+                    self._store.put(k, float(v))
+            else:
+                self._inner.skip_samples(j - i)
+            i = j
+        return vals
+
+    def measure_final(self, config: Config, repeats: int = 10) -> float:
+        k = f"{self._key(config)}|final{repeats}"
+        v = self._store.get(k)
+        if v is None:
+            v = self._inner.measure_final(config, repeats)
+            self._store.put(k, v)
+        return float(v)
+
+    def reset(self) -> None:
+        super().reset()
+        self.n_misses = 0
+        self._inner.reset()
+
+    def save(self) -> None:
+        self._store.save()

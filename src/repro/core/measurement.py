@@ -33,20 +33,34 @@ class Measurement(Protocol):
 
 
 class BaseMeasurement:
-    """Common bookkeeping: sample counting and final-config repetition."""
+    """Common bookkeeping: sample + dispatch counting, final-config repetition.
+
+    ``n_samples`` audits the search budget (one per config served).
+    ``n_dispatches`` counts Python-level entries into the backend — the
+    batched engine's figure of merit: a vectorized backend serves a whole
+    batch in ONE dispatch, the scalar fallback pays one per config.
+    """
 
     def __init__(self) -> None:
         self.n_samples = 0
+        self.n_dispatches = 0
 
     def _measure_one(self, config: Config) -> float:  # pragma: no cover
         raise NotImplementedError
 
     def measure(self, config: Config) -> float:
         self.n_samples += 1
+        self.n_dispatches += 1
         return float(self._measure_one(config))
 
     def measure_batch(self, configs: Sequence[Config]) -> np.ndarray:
         return np.array([self.measure(c) for c in configs], dtype=np.float64)
+
+    def skip_samples(self, n: int) -> None:
+        """Advance any per-sample state (e.g. a noise counter) WITHOUT
+        measuring — called by caching layers when serving hits, so a
+        warm-cache run keeps the same per-sample noise alignment as a cold
+        one.  Default: nothing to advance."""
 
     def measure_final(self, config: Config, repeats: int = 10) -> float:
         """Re-measure the chosen config ``repeats`` times; return the median.
@@ -61,6 +75,7 @@ class BaseMeasurement:
 
     def reset(self) -> None:
         self.n_samples = 0
+        self.n_dispatches = 0
 
 
 class CallableMeasurement(BaseMeasurement):
@@ -77,6 +92,7 @@ class CallableMeasurement(BaseMeasurement):
         if self._batch_fn is None:
             return super().measure_batch(configs)
         self.n_samples += len(configs)
+        self.n_dispatches += 1
         return np.asarray(self._batch_fn(configs), dtype=np.float64)
 
 
@@ -127,17 +143,40 @@ class CachedMeasurement(BaseMeasurement):
         return tuple(sorted(config.items()))
 
     def measure(self, config: Config) -> float:
+        self.n_dispatches += 1
         k = self._key(config)
         if k not in self._cache:
             self._cache[k] = self._inner.measure(config)
             self.n_samples += 1
         return self._cache[k]
 
+    def measure_batch(self, configs: Sequence[Config]) -> np.ndarray:
+        """Batch-aware memoization: only uncached configs reach the inner
+        backend, in ONE dispatch (duplicates within the batch collapse)."""
+        self.n_dispatches += 1
+        keys = [self._key(c) for c in configs]
+        fresh_keys: list = []
+        fresh_cfgs: list = []
+        seen_fresh: set = set()
+        for k, c in zip(keys, configs):
+            if k not in self._cache and k not in seen_fresh:
+                seen_fresh.add(k)
+                fresh_keys.append(k)
+                fresh_cfgs.append(c)
+        if fresh_cfgs:
+            vals = self._inner.measure_batch(fresh_cfgs)
+            self.n_samples += len(fresh_cfgs)
+            self._cache.update(zip(fresh_keys, (float(v) for v in vals)))
+        return np.array([self._cache[k] for k in keys], dtype=np.float64)
+
     def _measure_one(self, config: Config) -> float:
         return self._inner._measure_one(config)
 
     def measure_final(self, config: Config, repeats: int = 10) -> float:
         return self._inner.measure_final(config, repeats)
+
+    def skip_samples(self, n: int) -> None:
+        self._inner.skip_samples(n)
 
     def reset(self) -> None:
         super().reset()

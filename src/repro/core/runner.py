@@ -26,6 +26,7 @@ def stable_seed(*parts) -> int:
     return zlib.crc32("|".join(map(str, parts)).encode()) & 0x7FFFFFFF
 
 from .dataset import SampleDataset
+from .engine import DISPATCH_MODES, DiskCachedMeasurement, MeasurementStore
 from .experiment import ExperimentDesign
 from .measurement import BaseMeasurement
 from .searchers import SEARCHERS, make_searcher
@@ -92,6 +93,20 @@ class MatrixResults:
 
 
 class MatrixRunner:
+    """Executes the (algorithm x sample-size x experiment) matrix through the
+    batched ask/tell engine.
+
+    ``dispatch`` selects the engine driver: ``"batch"`` (default) routes each
+    proposal batch through ``measure_batch`` — ONE Python-level dispatch per
+    batch on the vectorized cost-model backend; ``"one"`` measures config-by-
+    config (the parity-audit path; per-cell ``n_samples_used`` is identical).
+
+    ``store`` (a :class:`MeasurementStore`) enables the persistent on-disk
+    cache: every served value is memoized under
+    ``{cache_key}/seed={exp_seed}|{config}``, so re-running a matrix cell —
+    same kernel, same experiment stream — never re-measures.
+    """
+
     def __init__(
         self,
         space: SearchSpace,
@@ -101,10 +116,15 @@ class MatrixRunner:
         algorithms: tuple[str, ...] = ("rs", "rf", "ga", "bo_gp", "bo_tpe"),
         seed: int = 0,
         verbose: bool = False,
+        dispatch: str = "batch",
+        store: MeasurementStore | None = None,
+        cache_key: str = "",
     ):
         unknown = [a for a in algorithms if a not in SEARCHERS]
         if unknown:
             raise KeyError(f"unknown algorithms {unknown}")
+        if dispatch not in DISPATCH_MODES:
+            raise ValueError(f"dispatch must be one of {DISPATCH_MODES}")
         self.space = space
         self.measurement_factory = measurement_factory
         self.design = design
@@ -112,6 +132,17 @@ class MatrixRunner:
         self.algorithms = algorithms
         self.seed = seed
         self.verbose = verbose
+        self.dispatch = dispatch
+        self.store = store
+        self.cache_key = cache_key
+
+    def _make_measurement(self, exp_seed: int) -> BaseMeasurement:
+        m = self.measurement_factory(exp_seed)
+        if self.store is not None:
+            m = DiskCachedMeasurement(
+                m, self.store, prefix=f"{self.cache_key}/seed={exp_seed}"
+            )
+        return m
 
     # -- dataset-served paths (paper section VI.B) ---------------------------
     def _rs_from_dataset(self, experiment: int, budget: int) -> TuningResult:
@@ -149,7 +180,7 @@ class MatrixRunner:
         results = []
         for e in range(n_exp):
             exp_seed = stable_seed(self.seed, "rf", sample_size, e)
-            measurement = self.measurement_factory(exp_seed)
+            measurement = self._make_measurement(exp_seed)
             best = np.argsort(preds[e], kind="stable")[:top_k]
             run_vals = measurement.measure_batch(self.space.decode_batch(pool[best]))
             j = int(np.argmin(run_vals))
@@ -180,14 +211,16 @@ class MatrixRunner:
                 )
                 for e in range(n_exp):
                     exp_seed = stable_seed(self.seed, algo, sample_size, e)
-                    measurement = self.measurement_factory(exp_seed)
+                    measurement = self._make_measurement(exp_seed)
                     if rf_batch is not None:
                         tr = rf_batch[e]
                     elif self.dataset is not None and algo == "rs":
                         tr = self._rs_from_dataset(e, sample_size)
                     else:
                         searcher = make_searcher(algo, self.space, seed=exp_seed)
-                        tr = searcher.run(measurement, sample_size)
+                        tr = searcher.run(
+                            measurement, sample_size, dispatch=self.dispatch
+                        )
                     finals[e] = measurement.measure_final(
                         tr.best_config, self.design.final_repeats
                     )
@@ -207,4 +240,6 @@ class MatrixRunner:
                         f"[runner] {algo:7s} S={sample_size:4d} E={n_exp:4d} "
                         f"median={np.median(finals):.6g} best={finals.min():.6g}"
                     )
+        if self.store is not None:
+            self.store.save()
         return results

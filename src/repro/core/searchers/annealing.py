@@ -3,14 +3,16 @@
 Geometric cooling over +-1 neighborhood moves in index space; acceptance by
 the Metropolis criterion on the (noisy) runtime.  Included so the CLTune-era
 claim 'SA outperforms RS' can be re-examined inside the same harness
-(the paper lists SA/PSO as related work it did not compare)."""
+(the paper lists SA/PSO as related work it did not compare).
+
+SA is inherently sequential — each move depends on the previous acceptance —
+so its ask/tell proposals are single-config batches."""
 
 from __future__ import annotations
 
 import numpy as np
 
-from ..measurement import BaseMeasurement
-from .base import Searcher, TuningResult, register
+from .base import ProposalGen, Searcher, TuningResult, register
 
 
 @register
@@ -23,9 +25,9 @@ class SimulatedAnnealing(Searcher):
         self.t0 = t0
         self.t1 = t1
 
-    def _search(self, measurement: BaseMeasurement, budget: int, result: TuningResult):
+    def _propose(self, budget: int, result: TuningResult) -> ProposalGen:
         cur = self.space.sample_indices(self.rng, 1)[0]
-        cur_v = self._observe(measurement, self.space.decode(cur), result)
+        cur_v = float((yield [self.space.decode(cur)])[0])
         scale = abs(cur_v) or 1.0
         for step in range(budget - 1):
             frac = step / max(1, budget - 2)
@@ -34,7 +36,7 @@ class SimulatedAnnealing(Searcher):
                 nxt = self.space.neighbor(self.rng, cur)
                 if self.space.is_valid(self.space.decode(nxt)):
                     break
-            nxt_v = self._observe(measurement, self.space.decode(nxt), result)
+            nxt_v = float((yield [self.space.decode(nxt)])[0])
             delta = (nxt_v - cur_v) / scale
             if delta <= 0 or self.rng.random() < np.exp(-delta / max(temp, 1e-12)):
                 cur, cur_v = nxt, nxt_v

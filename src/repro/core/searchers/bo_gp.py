@@ -14,9 +14,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..measurement import BaseMeasurement
 from ..surrogates.gp import GaussianProcess, expected_improvement
-from .base import Searcher, TuningResult, register
+from .base import ProposalGen, Searcher, TuningResult, register
 
 
 @register
@@ -49,13 +48,13 @@ class BOGPSearcher(Searcher):
         local = self.space.mutate_batch(self.rng, incumbent, 0.3, n_loc)
         return np.concatenate([rand, local])
 
-    def _search(self, measurement: BaseMeasurement, budget: int, result: TuningResult):
+    def _propose(self, budget: int, result: TuningResult) -> ProposalGen:
         n_init = max(1, min(budget, int(round(self.init_frac * budget))))
         init_idx = self.space.sample_indices(self.rng, n_init)
-        self._observe_batch(measurement, self.space.decode_batch(init_idx), result)
+        init_vals = yield self.space.decode_batch(init_idx)
 
         X = list(init_idx)
-        y = list(result.history_values)
+        y = [float(v) for v in init_vals]
         gp = GaussianProcess()
         for r, v in zip(init_idx, y):
             gp.add(self.space.to_unit(r[None, :])[0], v)
@@ -71,7 +70,7 @@ class BOGPSearcher(Searcher):
             mu, sigma = gp.predict(self.space.to_unit(fresh))
             ei = expected_improvement(mu, sigma, best=float(np.min(y)))
             pick = fresh[int(np.argmax(ei))]
-            v = self._observe(measurement, self.space.decode(pick), result)
+            v = float((yield [self.space.decode(pick)])[0])
             X.append(pick)
             y.append(v)
             gp.add(self.space.to_unit(pick[None, :])[0], v)

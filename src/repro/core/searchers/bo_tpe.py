@@ -22,8 +22,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..measurement import BaseMeasurement
-from .base import Searcher, TuningResult, register
+from .base import ProposalGen, Searcher, TuningResult, register
 
 
 def _parzen_pmf(
@@ -62,13 +61,13 @@ class BOTPESearcher(Searcher):
         self.n_ei_candidates = n_ei_candidates
         self.prior_weight = prior_weight
 
-    def _search(self, measurement: BaseMeasurement, budget: int, result: TuningResult):
+    def _propose(self, budget: int, result: TuningResult) -> ProposalGen:
         n_startup = min(self.n_startup, budget)
         init = self.space.sample_indices(self.rng, n_startup)
-        self._observe_batch(measurement, self.space.decode_batch(init), result)
+        init_vals = yield self.space.decode_batch(init)
 
         X = [np.asarray(r) for r in init]
-        y = list(result.history_values)
+        y = [float(v) for v in init_vals]
 
         for _ in range(budget - n_startup):
             Xa = np.stack(X)
@@ -100,6 +99,6 @@ class BOTPESearcher(Searcher):
                     g_pmfs[d][cand[:, d]]
                 )
             pick = cand[int(np.argmax(log_ratio))]
-            v = self._observe(measurement, self.space.decode(pick), result)
+            v = float((yield [self.space.decode(pick)])[0])
             X.append(pick)
             y.append(v)

@@ -9,18 +9,18 @@ Kernel Tuner's GA (kernel_tuner/strategies/genetic_algorithm.py):
     paper's description: half the variables from parent A, half from B,
   * mutation: each gene mutates with low probability (10%).
 
-Re-visited chromosomes consume no extra budget when the measurement is
-cached, matching tuners that memoize; to be budget-exact we only evaluate
-*unseen* individuals and stop precisely at the sample budget.
+Each generation is proposed as ONE batch through the ask/tell engine.
+Re-visited chromosomes consume no extra budget (their previous observation
+is reused), matching tuners that memoize; the engine trims the final batch
+so the search stops precisely at the sample budget.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from ..measurement import BaseMeasurement
 from ..space import Config
-from .base import Searcher, TuningResult, register
+from .base import ProposalGen, Searcher, TuningResult, register
 
 
 @register
@@ -40,34 +40,35 @@ class GeneticAlgorithm(Searcher):
         take_a[self.rng.permutation(d)[: d // 2 + d % 2]] = True
         return np.where(take_a, a, b)
 
-    def _search(self, measurement: BaseMeasurement, budget: int, result: TuningResult):
+    def _evaluate(self, idxs: np.ndarray, seen: dict):
+        """Sub-generator: yield only unseen rows as one batch; return the
+        fitness of every row (revisits served from ``seen`` for free)."""
+        keys = [tuple(int(v) for v in row) for row in idxs]
+        fresh_keys: list = []
+        fresh_rows: list = []
+        for key, row in zip(keys, idxs):
+            if key not in seen and key not in fresh_keys:
+                fresh_keys.append(key)
+                fresh_rows.append(row)
+        if fresh_rows:
+            vals = yield self.space.decode_batch(np.array(fresh_rows))
+            seen.update(zip(fresh_keys, (float(v) for v in vals)))
+        # a trimmed final batch leaves some keys unmeasured; the engine never
+        # resumes the generator in that case, so every key is present here.
+        return np.array([seen[k] for k in keys], dtype=np.float64)
+
+    def _propose(self, budget: int, result: TuningResult) -> ProposalGen:
         pop_n = min(self.pop_size, budget)
         seen: dict[tuple, float] = {}
 
-        def evaluate(idxs: np.ndarray, remaining: int) -> tuple[np.ndarray, np.ndarray, int]:
-            """Measure unseen rows up to the remaining budget."""
-            vals = np.full(len(idxs), np.inf)
-            for i, row in enumerate(idxs):
-                key = tuple(int(v) for v in row)
-                if key in seen:
-                    vals[i] = seen[key]  # re-visit: previous observation, free
-                    continue
-                if remaining <= 0:
-                    continue
-                vals[i] = self._observe(measurement, self.space.decode(row), result)
-                seen[key] = vals[i]
-                remaining -= 1
-            keep = np.isfinite(vals)
-            return idxs[keep], vals[keep], remaining
-
         population = self.space.sample_indices(self.rng, pop_n)
-        population, fitness, remaining = evaluate(population, budget)
+        fitness = yield from self._evaluate(population, seen)
 
-        while remaining > 0 and len(population) >= 2:
+        while len(population) >= 2:
             order = np.argsort(fitness)
             n_keep = max(2, len(population) // 2)
             survivors = population[order[:n_keep]]
-            children = []
+            children: list = []
             attempts = 0
             while len(children) < pop_n - n_keep and attempts < 200:
                 attempts += 1
@@ -79,6 +80,7 @@ class GeneticAlgorithm(Searcher):
                 children.append(child)
             if not children:
                 break
-            child_idx, child_fit, remaining = evaluate(np.array(children), remaining)
+            child_idx = np.array(children)
+            child_fit = yield from self._evaluate(child_idx, seen)
             population = np.concatenate([survivors, child_idx])
             fitness = np.concatenate([fitness[order[:n_keep]], child_fit])

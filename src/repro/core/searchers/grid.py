@@ -1,13 +1,15 @@
 """Grid search — included for completeness (Bergstra & Bengio 2012 showed RS
 beats it; our harness lets that claim be re-verified).  With budget < |S| it
-measures an evenly-strided subset of the enumeration order."""
+measures an evenly-strided subset of the enumeration order, proposed as ONE
+vectorized batch.  Constraint-invalid strided points are replaced by
+continuing the strided enumeration at the next offset, so grid consumes its
+exact budget whenever the space holds enough valid configs."""
 
 from __future__ import annotations
 
 import numpy as np
 
-from ..measurement import BaseMeasurement
-from .base import Searcher, TuningResult, register
+from .base import ProposalGen, Searcher, TuningResult, register
 
 
 @register
@@ -15,21 +17,18 @@ class GridSearch(Searcher):
     name = "grid"
     uses_constraints = True
 
-    def _search(self, measurement: BaseMeasurement, budget: int, result: TuningResult):
+    def _propose(self, budget: int, result: TuningResult) -> ProposalGen:
         total = self.space.cardinality
-        stride = max(1, total // budget)
         cards = self.space.cardinalities
-        taken = 0
-        for flat in range(0, total, stride):
-            if taken >= budget:
+        stride = max(1, total // budget)
+        batch: list = []
+        for offset in range(stride):
+            flats = np.arange(offset, total, stride, dtype=np.int64)
+            idxs = np.stack(
+                np.unravel_index(flats, tuple(cards)), axis=1
+            ).astype(np.int64)
+            valid = self.space.valid_mask(idxs)
+            batch.extend(self.space.decode_batch(idxs[valid]))
+            if len(batch) >= budget:
                 break
-            idx = np.zeros(len(cards), dtype=np.int64)
-            rem = flat
-            for j in range(len(cards) - 1, -1, -1):
-                idx[j] = rem % cards[j]
-                rem //= cards[j]
-            cfg = self.space.decode(idx)
-            if not self.space.is_valid(cfg):
-                continue
-            self._observe(measurement, cfg, result)
-            taken += 1
+        yield batch[:budget]

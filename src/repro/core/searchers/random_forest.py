@@ -5,22 +5,22 @@ the models with the subset of size S-10 for each experiment and then run the
 top 10 predictions. The top performing prediction is then stored as the
 output.'
 
-So with budget S: S-10 random (constrained) training samples are measured,
-an RF regressor is fit on them, the model ranks a large candidate pool, and
-the 10 best-predicted configs are actually measured; the best of those 10 is
-the result.  The candidate pool is a constraint-valid random subsample of the
-space (pool_size=16384 by default — predicting over all 2.1M configs with a
-pure-python forest would only change which near-tied candidate wins; noted as
-a deviation in DESIGN.md).
+So with budget S: S-10 random (constrained) training samples are measured
+(ONE batch through the engine), an RF regressor is fit on them, the model
+ranks a large candidate pool, and the 10 best-predicted configs are actually
+measured (a second batch); the best of those 10 is the result.  The
+candidate pool is a constraint-valid random subsample of the space
+(pool_size=16384 by default — predicting over all 2.1M configs with a
+pure-python forest would only change which near-tied candidate wins; noted
+as a deviation in DESIGN.md).
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from ..measurement import BaseMeasurement
 from ..surrogates.forest_batched import BatchedForest
-from .base import Searcher, TuningResult, register
+from .base import ProposalGen, Searcher, TuningResult, register
 
 
 @register
@@ -41,31 +41,28 @@ class RandomForestSearcher(Searcher):
         self.top_k = top_k
         self.pool_size = pool_size
 
-    def _search(self, measurement: BaseMeasurement, budget: int, result: TuningResult):
+    def _propose(self, budget: int, result: TuningResult) -> ProposalGen:
         top_k = min(self.top_k, max(1, budget // 2))
         n_train = budget - top_k
         train_idx = self.space.sample_indices(self.rng, n_train)
-        train_vals = self._observe_batch(
-            measurement, self.space.decode_batch(train_idx), result
-        )
+        train_vals = yield self.space.decode_batch(train_idx)
 
         forest = BatchedForest(
             self.space.cardinalities,
             n_estimators=self.n_estimators,
             seed=int(self.rng.integers(0, 2**31)),
         )
-        forest.fit(train_idx[None], train_vals[None])
+        forest.fit(train_idx[None], np.asarray(train_vals)[None])
 
         pool = self.space.sample_indices(self.rng, self.pool_size)
         preds = forest.predict(pool)[0]
         best = np.argsort(preds, kind="stable")[: top_k]
-        self._observe_batch(measurement, self.space.decode_batch(pool[best]), result)
+        pred_cfgs = self.space.decode_batch(pool[best])
+        pred_vals = yield pred_cfgs
         # The RF result is the best of the top-k *predictions* actually run —
         # NOT the best training sample (the paper stores the top performing
-        # prediction).  _observe_batch tracked the global best including
-        # training samples, so re-derive the prediction-only best:
-        pred_vals = result.history_values[n_train:]
-        pred_cfgs = result.history_configs[n_train:]
+        # prediction).  The engine tracked the global best including training
+        # samples, so override with the prediction-only best:
         j = int(np.argmin(pred_vals))
         result.best_value = float(pred_vals[j])
         result.best_config = pred_cfgs[j]

@@ -4,13 +4,13 @@
 from the collection of S samples for the given experiment.' (section VI.B)
 
 RS samples the *constrained* space (constraint specification is available to
-non-SMBO methods).
+non-SMBO methods).  Under the ask/tell engine the whole budget is proposed
+as ONE batch — a single measurement dispatch on vectorized backends.
 """
 
 from __future__ import annotations
 
-from ..measurement import BaseMeasurement
-from .base import Searcher, TuningResult, register
+from .base import ProposalGen, Searcher, TuningResult, register
 
 
 @register
@@ -18,6 +18,5 @@ class RandomSearch(Searcher):
     name = "rs"
     uses_constraints = True
 
-    def _search(self, measurement: BaseMeasurement, budget: int, result: TuningResult):
-        configs = self.space.sample_batch(self.rng, budget)
-        self._observe_batch(measurement, configs, result)
+    def _propose(self, budget: int, result: TuningResult) -> ProposalGen:
+        yield self.space.sample_batch(self.rng, budget)

@@ -108,6 +108,19 @@ class SearchSpace:
     def decode_batch(self, idxs: np.ndarray) -> list[Config]:
         return [self.decode(row) for row in idxs]
 
+    def encode_batch(self, configs: Sequence[Config]) -> np.ndarray:
+        """Config dicts -> (n, d) index-vector matrix (inverse of
+        :meth:`decode_batch`) — for external ask/tell drivers that key their
+        evaluation history by index row rather than by config dict."""
+        lut = [{v: i for i, v in enumerate(p.values)} for p in self.params]
+        try:
+            return np.array(
+                [[m[c[p.name]] for p, m in zip(self.params, lut)] for c in configs],
+                dtype=np.int64,
+            ).reshape(len(configs), self.n_params)
+        except KeyError as e:
+            raise ValueError(f"config value {e.args[0]!r} not in this space") from e
+
     def to_unit(self, idxs: np.ndarray) -> np.ndarray:
         """Index vectors -> points in the unit cube (for GP kernels).
 

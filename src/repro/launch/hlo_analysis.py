@@ -118,8 +118,14 @@ def computation_multipliers(comps: dict[str, Computation]) -> dict[str, float]:
     return mult
 
 
-_DOT_RE = re.compile(
-    r"(\S+)\s+dot\(\s*%?([\w.\-]+)(?:\.clone)?\s*,\s*%?([\w.\-]+)"
+# Operands of `dot(...)` come in two HLO dialects: bare names
+# `dot(%lhs, %rhs)` (pre-optimization text) and typed operands
+# `dot(f32[128,256]{1,0} %lhs, ...)` (optimized/compiled text).  The inline
+# type, when present, is captured so the lhs shape needs no symbol lookup.
+_DOT_CALL_RE = re.compile(
+    r"(\(.*?\)|\S+)\s+dot\(\s*"
+    r"(?:(\w+\[[0-9,]*\](?:\{[0-9,*:a-zA-Z()]*\})?)\s+)?"
+    r"%?([\w.\-]+)\s*[,)]"
 )
 _LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|\S+)\s+[\w\-]+")
@@ -158,14 +164,14 @@ def dot_flops(hlo_text: str) -> dict:
             if " = " not in body:
                 continue
             name, rhs = body.split(" = ", 1)
-            om = re.match(r"(\(.*?\)|\S+)\s+dot\(\s*%?([\w.\-]+)\s*,", rhs)
+            om = _DOT_CALL_RE.match(rhs)
             if not om:
                 continue
-            out_shape, lhs_name = om.groups()
+            out_shape, lhs_type, lhs_name = om.groups()
             out_elems = 1
             for d in _first_shape_dims(out_shape):
                 out_elems *= d
-            lhs_dims = _first_shape_dims(shapes.get(lhs_name, ""))
+            lhs_dims = _first_shape_dims(lhs_type or shapes.get(lhs_name, ""))
             cm = _LHS_CONTRACT_RE.search(s)
             contract = 1
             if cm and cm.group(1) and lhs_dims:

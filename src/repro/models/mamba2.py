@@ -82,11 +82,15 @@ def ssd_chunked(
     dA = dtc * A[None, None, None, :]                              # (B,nc,Q,H)
     dA_cs = jnp.cumsum(dA, axis=2)                                 # (B,nc,Q,H)
 
-    # --- intra-chunk (diagonal) term
+    # --- intra-chunk (diagonal) term (fp32: the decode path computes the
+    # same per-token contributions through the fp32 state recurrence, and the
+    # two must agree for prefill/decode equivalence)
     L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))                 # (B,nc,H,Q,Q)
-    scores = jnp.einsum("bcqhn,bckhn->bchqk", cc, bc)              # (B,nc,H,Q,Q)
+    scores = jnp.einsum(
+        "bcqhn,bckhn->bchqk", cc.astype(jnp.float32), bc.astype(jnp.float32)
+    )                                                              # (B,nc,H,Q,Q)
     att = scores * L * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
-    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", att.astype(x.dtype), xc)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", att, xc.astype(jnp.float32))
 
     # --- per-chunk end states
     decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)           # (B,nc,Q,H)
@@ -117,20 +121,25 @@ def ssd_chunked(
     decay_in = jnp.exp(dA_cs)                                      # (B,nc,Q,H)
     y_off = jnp.einsum(
         "bcqhn,bchpn,bcqh->bcqhp", cc.astype(jnp.float32), h_in, decay_in
-    ).astype(x.dtype)
+    )
 
-    return (y_diag + y_off).reshape(bsz, s, h, p)
+    return (y_diag + y_off).astype(x.dtype).reshape(bsz, s, h, p)
 
 
 def _causal_depthwise_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """x: (B, S, C), w: (K, C) — causal depthwise conv via shift-and-add
-    (K is tiny, typically 4)."""
+    (K is tiny, typically 4).  Accumulates and returns fp32 so the result is
+    bitwise the sum the decode path computes over its rolling window (bf16
+    partial sums here would make the conv output — and everything the SSM
+    state is built from — diverge between prefill and decode)."""
     k = w.shape[0]
-    out = jnp.zeros_like(x)
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    out = jnp.zeros_like(xf)
     for i in range(k):
         shift = k - 1 - i
-        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1], :]
-        out = out + xi * w[i][None, None, :]
+        xi = jnp.pad(xf, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1], :]
+        out = out + xi * wf[i][None, None, :]
     return out
 
 
@@ -153,7 +162,8 @@ def mamba2_forward(
     xbc = zxbcdt[..., di : di + dims.conv_dim]
     dt = zxbcdt[..., di + dims.conv_dim :]
 
-    xbc = jax.nn.silu(_causal_depthwise_conv(xbc, p["conv_w"].astype(x.dtype)))
+    # fp32 conv + silu, cast once: mirrors the decode window dataflow exactly
+    xbc = jax.nn.silu(_causal_depthwise_conv(xbc, p["conv_w"])).astype(x.dtype)
     xs = xbc[..., :di]
     b = xbc[..., di : di + g * n].reshape(bsz, s, g, n)
     c = xbc[..., di + g * n :].reshape(bsz, s, g, n)
@@ -188,8 +198,11 @@ def mamba2_decode(
     dt = zxbcdt[:, di + dims.conv_dim :]
 
     conv_hist = jnp.concatenate([cache["conv"], xbc_new[:, None, :]], axis=1)
-    w = p["conv_w"].astype(x.dtype)                                  # (K, C)
-    xbc = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_hist, w))
+    w = p["conv_w"].astype(jnp.float32)                              # (K, C)
+    # fp32 window sum + silu, cast once — bitwise the prefill conv dataflow
+    xbc = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", conv_hist.astype(jnp.float32), w)
+    ).astype(x.dtype)
     new_conv = conv_hist[:, 1:]
 
     xs = xbc[:, :di].reshape(bsz, h, hd)

@@ -63,23 +63,32 @@ def mla_prefill(
     q_rope = apply_rope(q_rope, positions, rope_theta)
 
     c_kv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(x.dtype))
-    c_kv_n = rms_norm(c_kv, p["kv_norm"])
-    k_nope = jnp.einsum("bsr,rhe->bshe", c_kv_n, p["w_uk"].astype(x.dtype))
-    v = jnp.einsum("bsr,rhe->bshe", c_kv_n, p["w_uv"].astype(x.dtype))
+    # Scores and context run in fp32 end-to-end: the decode path computes the
+    # SAME quantities through the absorbed (latent-space) factorization, and
+    # bf16 rounding of the intermediates is dataflow-dependent — it is what
+    # made decode drift from prefill by the second token.  In fp32 the two
+    # factorizations agree to ~1e-6, which survives the bf16 residual cast.
+    c_kv_n = rms_norm(c_kv, p["kv_norm"]).astype(jnp.float32)
+    k_nope = jnp.einsum("bsr,rhe->bshe", c_kv_n, p["w_uk"].astype(jnp.float32))
+    v = jnp.einsum("bsr,rhe->bshe", c_kv_n, p["w_uv"].astype(jnp.float32))
     k_rope = jnp.einsum("bsd,de->bse", x, p["w_kr"].astype(x.dtype))
     k_rope = apply_rope(k_rope[:, :, None, :], positions, rope_theta)[:, :, 0]
 
     def attend(q_nope_c, q_rope_c, q_off):
-        """One query chunk against the full K/V (scores in fp32)."""
+        """One query chunk against the full K/V (fp32 throughout)."""
         sq = q_nope_c.shape[1]
         scores = (
-            jnp.einsum("bqhe,bkhe->bhqk", q_nope_c, k_nope)
-            + jnp.einsum("bqhe,bke->bhqk", q_rope_c, k_rope)
-        ).astype(jnp.float32) * dims.scale
+            jnp.einsum("bqhe,bkhe->bhqk", q_nope_c.astype(jnp.float32), k_nope)
+            + jnp.einsum(
+                "bqhe,bke->bhqk",
+                q_rope_c.astype(jnp.float32),
+                k_rope.astype(jnp.float32),
+            )
+        ) * dims.scale
         mask = (jnp.arange(sq)[:, None] + q_off) >= jnp.arange(s)[None, :]
         scores = jnp.where(mask[None, None], scores, -1e30)
-        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-        return jnp.einsum("bhqk,bkhe->bqhe", probs, v)
+        probs = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum("bhqk,bkhe->bqhe", probs, v).astype(x.dtype)
 
     if s > MLA_CHUNK_THRESHOLD:
         # query-chunked dataflow: peak scores memory (B, H, chunk, S)
@@ -124,17 +133,26 @@ def mla_decode(
     c_kv = cache["c_kv"] + oh[..., None] * c_kv_new
     k_rope = cache["k_rope"] + oh[..., None] * k_rope_new
 
-    c_kv_n = rms_norm(c_kv, p["kv_norm"])
-    # absorbed attention in latent space
-    q_lat = jnp.einsum("bshe,rhe->bshr", q_nope, p["w_uk"].astype(x.dtype))
+    # Absorbed attention in latent space, fp32 throughout — see the matching
+    # note in mla_prefill: prefill and decode factorize the same products
+    # differently, so both must accumulate in fp32 for the decode cache/state
+    # to track prefill.
+    c_kv_n = rms_norm(c_kv, p["kv_norm"]).astype(jnp.float32)
+    q_lat = jnp.einsum(
+        "bshe,rhe->bshr", q_nope.astype(jnp.float32), p["w_uk"].astype(jnp.float32)
+    )
     scores = (
         jnp.einsum("bshr,bkr->bhsk", q_lat, c_kv_n)
-        + jnp.einsum("bshe,bke->bhsk", q_rope, k_rope)
-    ).astype(jnp.float32) * dims.scale
+        + jnp.einsum(
+            "bshe,bke->bhsk", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32)
+        )
+    ) * dims.scale
     valid = jnp.arange(s_max)[None, :] <= cache_len[:, None]
     scores = jnp.where(valid[:, None, None], scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    probs = jax.nn.softmax(scores, axis=-1)
     o_lat = jnp.einsum("bhsk,bkr->bshr", probs, c_kv_n)
-    ctx = jnp.einsum("bshr,rhe->bshe", o_lat, p["w_uv"].astype(x.dtype))
+    ctx = jnp.einsum(
+        "bshr,rhe->bshe", o_lat, p["w_uv"].astype(jnp.float32)
+    ).astype(x.dtype)
     out = jnp.einsum("bshe,hed->bsd", ctx, p["w_o"].astype(x.dtype))
     return out, {"c_kv": c_kv, "k_rope": k_rope}

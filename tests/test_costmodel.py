@@ -3,6 +3,8 @@ executability constraint, architecture sensitivity."""
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import paper_space

@@ -1,0 +1,306 @@
+"""Batched ask/tell evaluation engine: budget exactness, batched/sequential
+parity, protocol mechanics, dispatch counting, and the persistent cache."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CallableMeasurement,
+    DiskCachedMeasurement,
+    EXTRA_ALGORITHMS,
+    ExperimentDesign,
+    MatrixRunner,
+    MeasurementStore,
+    PAPER_ALGORITHMS,
+    config_key,
+    drive,
+    make_searcher,
+    paper_space,
+)
+from repro.costmodel import CHIPS, WORKLOADS, CostModelMeasurement
+
+ALL = PAPER_ALGORITHMS + EXTRA_ALGORITHMS
+
+
+def smooth(cfg):
+    x = np.array([cfg["t_x"] / 16, cfg["t_y"] / 16, cfg["t_z"] / 16,
+                  cfg["w_x"] / 8, cfg["w_y"] / 8, cfg["w_z"] / 8])
+    target = np.array([0.5, 0.75, 0.25, 0.6, 0.9, 0.3])
+    return 1.0 + float(((x - target) ** 2).sum())
+
+
+def smooth_batch(cfgs):
+    return np.array([smooth(c) for c in cfgs], dtype=np.float64)
+
+
+@pytest.fixture(scope="module")
+def space():
+    return paper_space()
+
+
+# -------------------------------------------------- budget exactness
+
+
+@pytest.mark.parametrize("algo", ALL)
+@pytest.mark.parametrize("budget", [5, 25, 60])
+def test_batched_driver_consumes_exact_budget(space, algo, budget):
+    """Every searcher, driven batched, uses exactly its sample budget —
+    audited against the measurement's own counter, not the result."""
+    m = CallableMeasurement(smooth)
+    r = make_searcher(algo, space, seed=0).run(m, budget, dispatch="batch")
+    assert r.n_samples == budget
+    assert m.n_samples == budget
+    assert len(r.history_values) == budget
+
+
+@pytest.mark.parametrize("algo", ALL)
+def test_sequential_driver_consumes_exact_budget(space, algo):
+    m = CallableMeasurement(smooth)
+    r = make_searcher(algo, space, seed=0).run(m, 40, dispatch="one")
+    assert r.n_samples == 40
+    assert m.n_samples == 40
+
+
+# -------------------------------------------------- batched == sequential
+
+
+@pytest.mark.parametrize("algo", ["rs", "ga"])
+def test_batched_matches_sequential_history(space, algo):
+    """Identical histories (configs AND values) for a fixed seed whether the
+    engine dispatches batches or single configs."""
+    rb = make_searcher(algo, space, seed=11).run(
+        CallableMeasurement(smooth, batch_fn=smooth_batch), 60, dispatch="batch"
+    )
+    rs = make_searcher(algo, space, seed=11).run(
+        CallableMeasurement(smooth), 60, dispatch="one"
+    )
+    assert rb.history_configs == rs.history_configs
+    assert rb.history_values == rs.history_values
+    assert rb.best_config == rs.best_config
+    assert rb.best_value == rs.best_value
+
+
+@pytest.mark.parametrize("algo", ALL)
+def test_batched_matches_sequential_on_costmodel(space, algo):
+    """The cost-model backend's counter-based noise is dispatch-invariant,
+    so parity holds for every searcher even under noise."""
+    w, chip = WORKLOADS["harris"], CHIPS["v5e"]
+    rb = make_searcher(algo, space, seed=3).run(
+        CostModelMeasurement(w, chip, seed=5), 30, dispatch="batch"
+    )
+    rs = make_searcher(algo, space, seed=3).run(
+        CostModelMeasurement(w, chip, seed=5), 30, dispatch="one"
+    )
+    assert rb.history_values == rs.history_values
+    assert rb.best_value == rs.best_value
+
+
+# -------------------------------------------------- ask/tell protocol
+
+
+def test_ask_tell_protocol_chunks(space):
+    """ask(n) may split an algorithm batch; history order is preserved."""
+    s = make_searcher("rs", space, seed=2)
+    s.start(20)
+    served = 0
+    while not s.done:
+        configs = s.ask(7)
+        if not configs:
+            break
+        assert len(configs) <= 7
+        s.tell(configs, [smooth(c) for c in configs])
+        served += len(configs)
+    r = s.finish()
+    assert served == 20
+    assert r.n_samples == 20
+
+
+def test_ask_twice_without_tell_raises(space):
+    s = make_searcher("rs", space, seed=0)
+    s.start(10)
+    s.ask(3)
+    with pytest.raises(RuntimeError):
+        s.ask(3)
+
+
+def test_tell_mismatched_configs_raises(space):
+    s = make_searcher("rs", space, seed=0)
+    s.start(10)
+    configs = s.ask(2)
+    with pytest.raises(ValueError):
+        s.tell(list(reversed(configs)), [1.0, 2.0])
+
+
+def test_run_without_session_raises(space):
+    s = make_searcher("rs", space, seed=0)
+    with pytest.raises(RuntimeError):
+        s.ask()
+
+
+# -------------------------------------------------- dispatch counting
+
+
+def test_batched_dispatch_is_order_of_magnitude_cheaper(space):
+    """rs proposes its whole budget as one batch: 1 dispatch vs 400."""
+    w, chip = WORKLOADS["add"], CHIPS["v5e"]
+    mb = CostModelMeasurement(w, chip, seed=0)
+    make_searcher("rs", space, seed=0).run(mb, 400, dispatch="batch")
+    mo = CostModelMeasurement(w, chip, seed=0)
+    make_searcher("rs", space, seed=0).run(mo, 400, dispatch="one")
+    assert mb.n_dispatches == 1
+    assert mo.n_dispatches == 400
+    assert mb.n_dispatches * 5 <= mo.n_dispatches
+
+
+# -------------------------------------------------- persistent disk cache
+
+
+def test_disk_cache_serves_repeat_runs(space, tmp_path):
+    path = str(tmp_path / "cache.json")
+    w, chip = WORKLOADS["harris"], CHIPS["v5e"]
+
+    store = MeasurementStore(path)
+    inner1 = CostModelMeasurement(w, chip, seed=9)
+    m1 = DiskCachedMeasurement(inner1, store, prefix="harris/v5e/seed=9")
+    r1 = make_searcher("ga", space, seed=4).run(m1, 40)
+    assert m1.n_samples == 40
+    assert m1.n_misses == 40
+    store.save()
+
+    # a fresh process re-running the same cell: zero inner measurements
+    store2 = MeasurementStore(path)
+    inner2 = CostModelMeasurement(w, chip, seed=9)
+    m2 = DiskCachedMeasurement(inner2, store2, prefix="harris/v5e/seed=9")
+    r2 = make_searcher("ga", space, seed=4).run(m2, 40)
+    assert m2.n_samples == 40          # budget audit unchanged by cache hits
+    assert m2.n_misses == 0
+    assert inner2.n_samples == 0
+    assert r1.history_values == r2.history_values
+
+    # a different experiment stream shares the file but not the entries
+    m3 = DiskCachedMeasurement(
+        CostModelMeasurement(w, chip, seed=10), store2, prefix="harris/v5e/seed=10"
+    )
+    make_searcher("ga", space, seed=4).run(m3, 10)
+    assert m3.n_misses == 10
+
+
+def test_disk_cache_measure_final_memoized(tmp_path):
+    w, chip = WORKLOADS["add"], CHIPS["v4"]
+    store = MeasurementStore(str(tmp_path / "c.json"))
+    cfg = dict(t_x=1, t_y=2, t_z=1, w_x=1, w_y=1, w_z=1)
+    m = DiskCachedMeasurement(CostModelMeasurement(w, chip, seed=0), store, "k")
+    a = m.measure_final(cfg)
+    b = m.measure_final(cfg)
+    assert a == b
+
+
+def test_config_key_is_order_insensitive():
+    assert config_key({"b": 2, "a": 1}) == config_key({"a": 1, "b": 2})
+
+
+def test_disk_cache_keeps_noise_alignment_on_partial_hits(space, tmp_path):
+    """A cache that is warm for only a PREFIX of the stream must not shift
+    the noise indices of the later, uncached samples (hits advance the
+    inner backend's counter via skip_samples)."""
+    w, chip = WORKLOADS["harris"], CHIPS["v5e"]
+    rng = np.random.default_rng(0)
+    configs = space.sample_batch(rng, 30)
+
+    cold = CostModelMeasurement(w, chip, seed=1).measure_batch(configs)
+
+    store = MeasurementStore(str(tmp_path / "c.json"))
+    # warm the first 10 entries only (simulates an interrupted run)
+    m_warm = DiskCachedMeasurement(CostModelMeasurement(w, chip, seed=1), store, "p")
+    m_warm.measure_batch(configs[:10])
+    m_resume = DiskCachedMeasurement(
+        CostModelMeasurement(w, chip, seed=1), store, "p"
+    )
+    resumed = m_resume.measure_batch(configs)
+    assert m_resume.n_misses == 20
+    np.testing.assert_array_equal(resumed, cold)
+
+
+def test_encode_batch_roundtrips_and_rejects_foreign_values(space):
+    rng = np.random.default_rng(5)
+    idx = space.sample_indices(rng, 50)
+    cfgs = space.decode_batch(idx)
+    np.testing.assert_array_equal(space.encode_batch(cfgs), idx)
+    assert space.encode_batch([]).shape == (0, space.n_params)
+    with pytest.raises(ValueError):
+        space.encode_batch([dict(cfgs[0], t_x=999)])
+
+
+def test_reset_clears_dispatch_counter(space):
+    m = CallableMeasurement(smooth)
+    m.measure_batch(space.sample_batch(np.random.default_rng(0), 5))
+    assert m.n_dispatches > 0
+    m.reset()
+    assert m.n_dispatches == 0 and m.n_samples == 0
+
+
+# -------------------------------------------------- matrix runner parity
+
+
+def test_runner_dispatch_parity_per_cell():
+    """The full matrix smoke run: batched and sequential dispatch agree on
+    per-cell n_samples_used (and, noise being dispatch-invariant, finals)."""
+    w, chip = WORKLOADS["harris"], CHIPS["v5e"]
+    from repro.costmodel import executable_space
+
+    space = executable_space(w, chip)
+
+    def run(dispatch):
+        runner = MatrixRunner(
+            space,
+            lambda s: CostModelMeasurement(w, chip, seed=s),
+            ExperimentDesign(sample_sizes=(25,), n_experiments=(3,)),
+            algorithms=("rs", "ga", "bo_tpe"),
+            dispatch=dispatch,
+        )
+        return runner.run()
+
+    rb, ro = run("batch"), run("one")
+    for key in rb.cells:
+        assert np.array_equal(
+            rb.cells[key].n_samples_used, ro.cells[key].n_samples_used
+        )
+        np.testing.assert_array_equal(
+            rb.cells[key].final_values, ro.cells[key].final_values
+        )
+
+
+def test_runner_with_store_never_remeasures(tmp_path):
+    w, chip = WORKLOADS["add"], CHIPS["v5e"]
+    from repro.costmodel import executable_space
+
+    space = executable_space(w, chip)
+    path = str(tmp_path / "matrix_cache.json")
+
+    counters = []
+
+    def factory(seed):
+        m = CostModelMeasurement(w, chip, seed=seed)
+        counters.append(m)
+        return m
+
+    def run():
+        return MatrixRunner(
+            space,
+            factory,
+            ExperimentDesign(sample_sizes=(25,), n_experiments=(2,)),
+            algorithms=("rs", "ga"),
+            store=MeasurementStore(path),
+            cache_key="add/v5e",
+        ).run()
+
+    r1 = run()
+    first_inner = sum(m.n_samples for m in counters)
+    assert first_inner > 0
+    counters.clear()
+    r2 = run()
+    assert sum(m.n_samples for m in counters) == 0   # everything from disk
+    for key in r1.cells:
+        np.testing.assert_array_equal(
+            r1.cells[key].final_values, r2.cells[key].final_values
+        )
