@@ -3,10 +3,13 @@
 # themselves when absent).
 PYTHON ?= python
 
-.PHONY: test test-fast bench install-dev
+.PHONY: test test-fast bench lint install-dev
 
 test:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q
+
+lint:
+	ruff check src tests benchmarks examples
 
 test-fast:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q tests/test_space.py tests/test_searchers.py tests/test_costmodel.py tests/test_stats.py tests/test_surrogates.py

@@ -20,16 +20,31 @@ from repro.core import MatrixResults, stats
 ALGOS = ("rs", "rf", "ga", "bo_gp", "bo_tpe")
 
 
+def _normalize_meta(meta: dict) -> dict:
+    """Accept both a versioned RunRecord (the tune_matrix facade's output)
+    and the legacy flat meta dict; always expose ``meta["optimum"]`` as the
+    pct-of-optimum denominator (the backend's noise-free true optimum when
+    available, else the best observed final)."""
+    if "run_record_version" not in meta:
+        return meta
+    result = dict(meta.get("result", {}))
+    flat = {**meta.get("extra", {}), **result}
+    flat["optimum"] = result.get("true_optimum", result.get("best_observed"))
+    flat["spec"] = meta.get("spec", {})
+    flat["provenance"] = meta.get("provenance", {})
+    return flat
+
+
 def load_all(results_dir: str) -> dict:
     """{(bench, chip): (MatrixResults, meta)} for every stored combo."""
     out = {}
     for fname in sorted(os.listdir(results_dir)):
-        if not fname.endswith(".npz"):
+        if not fname.endswith(".npz") or "_dataset_" in fname:
             continue
         bench, chip = fname[:-4].rsplit("_", 1)
         res = MatrixResults.load(os.path.join(results_dir, fname))
         with open(os.path.join(results_dir, f"{bench}_{chip}.json")) as f:
-            meta = json.load(f)
+            meta = _normalize_meta(json.load(f))
         out[(bench, chip)] = (res, meta)
     return out
 

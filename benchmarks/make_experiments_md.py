@@ -20,7 +20,6 @@ import sys
 sys.path.insert(0, "src")
 sys.path.insert(0, ".")
 
-import numpy as np
 
 from benchmarks.figures import (
     fig2_pct_optimum,
@@ -33,7 +32,6 @@ from benchmarks.figures import (
     render_grid,
 )
 from benchmarks.validate_claims import validate
-from repro.configs import REGISTRY, applicable_shapes
 from repro.launch.roofline import all_rows, markdown_table
 
 MATRIX_DIR = "results/paper_matrix"

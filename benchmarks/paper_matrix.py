@@ -1,35 +1,32 @@
-"""Run the paper's full experiment matrix.
+"""Run the paper's full experiment matrix through the ``repro.tune_matrix``
+facade.
 
 3 benchmarks (add / harris / mandelbrot)  x  3 chip models (v5e / v4 / v3)
 x 5 algorithms (rs / rf / ga / bo_gp / bo_tpe)  x  sample sizes
 {25, 50, 100, 200, 400} with experiment counts {800, 400, 200, 100, 50}
 (or a budget-scaled design) — the reproduction of the paper's ~3,019,500
-samples.  Results are persisted per (benchmark, chip) combo so interrupted
-runs resume.
+samples.  Each (benchmark, chip) combo is one declarative
+:class:`TuningSpec`; results are persisted per combo (``.npz`` + versioned
+``RunRecord`` JSON) so interrupted runs resume, and ``--shards N`` fans the
+matrix cells of each combo across N worker processes (bit-identical to the
+single-process run).
 
 Usage:
     PYTHONPATH=src python -m benchmarks.paper_matrix --design paper
-    PYTHONPATH=src python -m benchmarks.paper_matrix --design scaled --budget 2000
+    PYTHONPATH=src python -m benchmarks.paper_matrix --design scaled --budget 2000 --shards 4
 """
 
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
-import numpy as np
+import repro
+from repro.core import ExperimentDesign, TuningSpec
 
-from repro.core import ExperimentDesign, MatrixRunner, MeasurementStore, SampleDataset
-from repro.costmodel import (
-    CHIPS,
-    WORKLOADS,
-    CostModelMeasurement,
-    executable_space,
-    true_optimum,
-)
-
+BENCHMARKS = ("add", "harris", "mandelbrot")
+CHIP_NAMES = ("v5e", "v4", "v3")
 ALGOS = ("rs", "rf", "ga", "bo_gp", "bo_tpe")
 DATASET_SEED = 7
 GEN_SEED = 999
@@ -39,18 +36,35 @@ def combo_path(out_dir: str, bench: str, chip: str) -> str:
     return os.path.join(out_dir, f"{bench}_{chip}.npz")
 
 
-def run_combo(bench: str, chip_name: str, design: ExperimentDesign, out_dir: str,
-              algorithms=ALGOS, seed: int = 0, verbose: bool = True,
-              cache: bool = True, dispatch: str = "batch") -> None:
-    w, chip = WORKLOADS[bench], CHIPS[chip_name]
-    space = executable_space(w, chip)
-    dataset = SampleDataset.generate(
-        space,
-        CostModelMeasurement(w, chip, seed=GEN_SEED),
-        n=20000,
-        seed=DATASET_SEED,
-        # seeds in the filename: changing either invalidates the cache
-        cache_path=(
+def combo_spec(bench: str, chip_name: str, design: ExperimentDesign,
+               out_dir: str, algorithms=ALGOS, seed: int = 0,
+               cache: bool = True, dispatch: str = "batch",
+               store: str = "json") -> TuningSpec:
+    """The declarative spec for one (benchmark, chip) combo."""
+    store_ext = "sqlite" if store == "sqlite" else "json"
+    return TuningSpec(
+        kernel=bench,
+        backend="costmodel",
+        backend_kwargs={"chip": chip_name},
+        algorithms=tuple(algorithms),
+        design=design,
+        seed=seed,
+        dispatch=dispatch,
+        cache_key=f"{bench}/{chip_name}",
+        # persistent (kernel, config) cache: re-running an interrupted combo
+        # serves every previously-measured cell from disk
+        store=store if cache else None,
+        store_path=(
+            os.path.join(out_dir, f"{bench}_{chip_name}_cache.{store_ext}")
+            if cache
+            else None
+        ),
+        # the 20k pre-generated dataset serving the non-SMBO methods
+        # (seeds in the filename: changing either invalidates the cache)
+        dataset_size=20000,
+        dataset_seed=DATASET_SEED,
+        dataset_gen_seed=GEN_SEED,
+        dataset_cache=(
             os.path.join(
                 out_dir,
                 f"{bench}_{chip_name}_dataset_s{DATASET_SEED}g{GEN_SEED}.npz",
@@ -59,42 +73,22 @@ def run_combo(bench: str, chip_name: str, design: ExperimentDesign, out_dir: str
             else None
         ),
     )
-    opt_cfg, opt = true_optimum(w, chip)
-    # persistent (kernel, config) cache: re-running an interrupted combo
-    # serves every previously-measured cell from disk
-    store = (
-        MeasurementStore(os.path.join(out_dir, f"{bench}_{chip_name}_cache.json"))
-        if cache
-        else None
-    )
-    runner = MatrixRunner(
-        space,
-        lambda s: CostModelMeasurement(w, chip, seed=s),
-        design,
-        dataset=dataset,
-        algorithms=algorithms,
-        seed=seed,
-        verbose=verbose,
-        dispatch=dispatch,
-        store=store,
-        cache_key=f"{bench}/{chip_name}",
-    )
+
+
+def run_combo(bench: str, chip_name: str, design: ExperimentDesign, out_dir: str,
+              algorithms=ALGOS, seed: int = 0, verbose: bool = True,
+              cache: bool = True, dispatch: str = "batch", shards: int = 1,
+              store: str = "json") -> None:
+    spec = combo_spec(bench, chip_name, design, out_dir, algorithms=algorithms,
+                      seed=seed, cache=cache, dispatch=dispatch, store=store)
     t0 = time.time()
-    results = runner.run()
-    results.save(combo_path(out_dir, bench, chip_name))
-    meta = {
-        "bench": bench,
-        "chip": chip_name,
-        "optimum": opt,
-        "optimum_config": opt_cfg,
-        "dataset_best": dataset.optimum,
-        "design": {"sample_sizes": design.sample_sizes,
-                   "n_experiments": design.n_experiments},
-        "wall_s": time.time() - t0,
-    }
-    with open(os.path.join(out_dir, f"{bench}_{chip_name}.json"), "w") as f:
-        json.dump(meta, f, indent=2)
-    print(f"[matrix] {bench} x {chip_name} done in {meta['wall_s']:.0f}s "
+    repro.tune_matrix(spec, shards=shards, out_dir=out_dir, verbose=verbose)
+    record = repro.RunRecord.load(
+        os.path.join(out_dir, f"{bench}_{chip_name}.json")
+    )
+    opt = record.result.get("true_optimum")
+    opt_cfg = record.result.get("true_optimum_config")
+    print(f"[matrix] {bench} x {chip_name} done in {time.time() - t0:.0f}s "
           f"(optimum {opt*1e3:.3f} ms @ {opt_cfg})")
 
 
@@ -103,6 +97,10 @@ def main() -> None:
     ap.add_argument("--design", choices=("paper", "scaled"), default="scaled")
     ap.add_argument("--budget", type=int, default=2000,
                     help="per-cell sample budget for --design scaled")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="worker processes per combo (cells fan out)")
+    ap.add_argument("--store", choices=("json", "sqlite"), default="json",
+                    help="measurement-cache backend (sqlite for paper-exact runs)")
     ap.add_argument("--out", default=None)
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
@@ -118,13 +116,14 @@ def main() -> None:
     os.makedirs(out_dir, exist_ok=True)
 
     t0 = time.time()
-    for bench in WORKLOADS:
-        for chip_name in CHIPS:
+    for bench in BENCHMARKS:
+        for chip_name in CHIP_NAMES:
             path = combo_path(out_dir, bench, chip_name)
             if os.path.exists(path) and not args.force:
                 print(f"[matrix] skip existing {path}")
                 continue
-            run_combo(bench, chip_name, design, out_dir)
+            run_combo(bench, chip_name, design, out_dir,
+                      shards=args.shards, store=args.store)
     print(f"[matrix] all combos done in {(time.time()-t0)/60:.1f} min -> {out_dir}")
 
 

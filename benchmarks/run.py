@@ -26,8 +26,7 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(ROOT, "src"))
 sys.path.insert(0, ROOT)
 
-from repro.core import ExperimentDesign, make_searcher
-from repro.costmodel import CHIPS, WORKLOADS, CostModelMeasurement
+from repro.core import ExperimentDesign, TuningSession, TuningSpec
 
 from benchmarks.figures import (
     fig2_pct_optimum,
@@ -36,22 +35,24 @@ from benchmarks.figures import (
     fig4b_cles,
     load_all,
 )
-from benchmarks.paper_matrix import combo_path, run_combo
+from benchmarks.paper_matrix import BENCHMARKS, CHIP_NAMES, combo_path, run_combo
 from benchmarks.validate_claims import validate
 
 
-def ensure_matrix(out_dir: str, budget: int) -> str:
+def ensure_matrix(out_dir: str, budget: int, shards: int = 1) -> str:
     full_dir = os.path.join("results", "paper_matrix")
     if all(
-        os.path.exists(combo_path(full_dir, b, c)) for b in WORKLOADS for c in CHIPS
+        os.path.exists(combo_path(full_dir, b, c))
+        for b in BENCHMARKS
+        for c in CHIP_NAMES
     ):
         return full_dir
     design = ExperimentDesign.scaled(budget=budget)
     os.makedirs(out_dir, exist_ok=True)
-    for b in WORKLOADS:
-        for c in CHIPS:
+    for b in BENCHMARKS:
+        for c in CHIP_NAMES:
             if not os.path.exists(combo_path(out_dir, b, c)):
-                run_combo(b, c, design, out_dir, verbose=False)
+                run_combo(b, c, design, out_dir, verbose=False, shards=shards)
     return out_dir
 
 
@@ -90,14 +91,12 @@ def table_fig4(results_dir: str) -> None:
 def table_searcher_overhead() -> None:
     """Algorithm cost per sample (the paper ignores it by design — section V
     — but the framework reports it for completeness)."""
-    from repro.costmodel import executable_space
-
-    w, chip = WORKLOADS["harris"], CHIPS["v5e"]
-    space = executable_space(w, chip)
     for algo in ("rs", "rf", "ga", "bo_gp", "bo_tpe", "sa", "pso"):
-        m = CostModelMeasurement(w, chip, seed=0)
+        session = TuningSession(
+            TuningSpec(kernel="harris", searcher=algo, budget=100, seed=0)
+        )
         t0 = time.perf_counter()
-        make_searcher(algo, space, seed=0).run(m, 100)
+        session.run()
         dt = time.perf_counter() - t0
         print(f"searcher_overhead/{algo},{dt/100*1e6:.1f},budget=100")
 
@@ -107,26 +106,23 @@ def table_engine_dispatch(budget: int = 400) -> None:
     cost-model backend: Python-level measurement dispatches and wall clock
     per searcher.  The batched path must dispatch >=5x less (it does ~100x
     less for the batch-friendly searchers)."""
-    from repro.costmodel import executable_space
-
-    w, chip = WORKLOADS["harris"], CHIPS["v5e"]
-    space = executable_space(w, chip)
     tot_b = tot_o = 0
     for algo in ("rs", "rf", "ga", "pso", "grid"):
-        mb = CostModelMeasurement(w, chip, seed=0)
+        spec = TuningSpec(kernel="harris", searcher=algo, budget=budget, seed=0)
+        sb = TuningSession(spec)
         t0 = time.perf_counter()
-        make_searcher(algo, space, seed=0).run(mb, budget, dispatch="batch")
+        sb.run()
         t_batch = time.perf_counter() - t0
-        mo = CostModelMeasurement(w, chip, seed=0)
+        so = TuningSession(spec.replace(dispatch="one"))
         t0 = time.perf_counter()
-        make_searcher(algo, space, seed=0).run(mo, budget, dispatch="one")
+        so.run()
         t_one = time.perf_counter() - t0
-        tot_b += mb.n_dispatches
-        tot_o += mo.n_dispatches
-        ratio = mo.n_dispatches / max(1, mb.n_dispatches)
+        tot_b += sb.measurement.n_dispatches
+        tot_o += so.measurement.n_dispatches
+        ratio = so.measurement.n_dispatches / max(1, sb.measurement.n_dispatches)
         print(
             f"engine_dispatch/{algo},{t_batch*1e6:.0f},"
-            f"dispatches={mb.n_dispatches}v{mo.n_dispatches} "
+            f"dispatches={sb.measurement.n_dispatches}v{so.measurement.n_dispatches} "
             f"ratio={ratio:.0f}x wall={t_one/max(t_batch,1e-9):.1f}x"
         )
     print(
@@ -168,20 +164,23 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--budget", type=int, default=500)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--shards", type=int, default=1)
     args = ap.parse_args()
 
     t0 = time.time()
     if args.full:
         out = os.path.join("results", "paper_matrix")
         os.makedirs(out, exist_ok=True)
-        for b in WORKLOADS:
-            for c in CHIPS:
+        for b in BENCHMARKS:
+            for c in CHIP_NAMES:
                 if not os.path.exists(combo_path(out, b, c)):
-                    run_combo(b, c, ExperimentDesign.paper(), out)
+                    run_combo(b, c, ExperimentDesign.paper(), out,
+                              shards=args.shards)
         results_dir = out
     else:
         results_dir = ensure_matrix(
-            os.path.join("results", f"matrix_{args.budget}"), args.budget
+            os.path.join("results", f"matrix_{args.budget}"), args.budget,
+            shards=args.shards,
         )
     print(f"# matrix: {results_dir}")
     table_fig2(results_dir)

@@ -1,14 +1,16 @@
-"""Quickstart: autotune a TPU kernel config with every paper algorithm.
+"""Quickstart: autotune a TPU kernel config with every paper algorithm —
+through the one-call public API.
 
 Tunes the Harris-corner kernel's 6-parameter space (DESIGN.md 2.1) on the
 v5e chip model with a 100-sample budget and compares the algorithms the
 paper compares — then runs the statistics the paper runs (MWU + CLES).
 
-Every search below routes through the batched ask/tell engine:
-``searcher.run(measurement, budget)`` drives the searcher's proposal batches
-through ``measure_batch`` (one vectorized dispatch per batch).  The
-``ask_tell_demo`` shows the protocol underneath ``run`` — the form to use
-when an external system (a real TPU queue, a cluster scheduler) owns the
+Everything goes through the declarative facade: a :class:`TuningSpec` names
+the kernel, the searcher, and the measurement backend (resolved from the
+``BACKENDS`` registry), and ``repro.tune(spec)`` drives the batched
+ask/tell engine and the paper's final re-measurement.  The
+``ask_tell_demo`` shows the protocol underneath — the form to use when an
+external system (a real TPU queue, a cluster scheduler) owns the
 evaluation loop.
 
     PYTHONPATH=src python examples/quickstart.py
@@ -16,23 +18,25 @@ evaluation loop.
 
 import numpy as np
 
-from repro.core import PAPER_ALGORITHMS, make_searcher, stats
-from repro.costmodel import (
-    CHIPS,
-    WORKLOADS,
-    CostModelMeasurement,
-    executable_space,
-    true_optimum,
-)
+import repro
+from repro.core import PAPER_ALGORITHMS, TuningSession, TuningSpec, make_searcher, stats
 
 BUDGET = 100
 REPEATS = 20
 
+SPEC = TuningSpec(
+    kernel="harris",
+    backend="costmodel",
+    backend_kwargs={"chip": "v5e"},
+    budget=BUDGET,
+)
 
-def ask_tell_demo(space, w, chip) -> None:
+
+def ask_tell_demo() -> None:
     """Drive one search by hand through the ask/tell protocol."""
-    searcher = make_searcher("ga", space, seed=0)
-    measurement = CostModelMeasurement(w, chip, seed=0)
+    session = TuningSession(SPEC)                 # resolves space + backend
+    searcher = make_searcher("ga", session.space, seed=0)
+    measurement = repro.make_measurement("costmodel", kernel="harris", chip="v5e", seed=0)
     searcher.start(BUDGET)
     n_batches = 0
     while not searcher.done:
@@ -50,21 +54,19 @@ def ask_tell_demo(space, w, chip) -> None:
 
 
 def main() -> None:
-    w, chip = WORKLOADS["harris"], CHIPS["v5e"]
-    space = executable_space(w, chip)
-    opt_cfg, opt = true_optimum(w, chip)
-    print(f"benchmark=harris chip=v5e |S|={space.cardinality:,} budget={BUDGET}")
+    session = TuningSession(SPEC)
+    opt_cfg, opt = repro.BACKENDS["costmodel"].true_optimum(kernel="harris", chip="v5e")
+    print(f"benchmark=harris chip=v5e |S|={session.space.cardinality:,} budget={BUDGET}")
     print(f"true optimum: {opt*1e3:.3f} ms @ {opt_cfg}\n")
 
-    ask_tell_demo(space, w, chip)
+    ask_tell_demo()
 
     finals = {}
     for algo in PAPER_ALGORITHMS:
         runs = []
         for seed in range(REPEATS):
-            m = CostModelMeasurement(w, chip, seed=seed)
-            r = make_searcher(algo, space, seed=seed).run(m, BUDGET)
-            runs.append(m.measure_final(r.best_config, repeats=10))
+            r = repro.tune(SPEC.replace(searcher=algo, seed=seed))
+            runs.append(r.final_value)     # median-of-10 re-measurement
         finals[algo] = np.array(runs)
         print(
             f"{algo:7s} median={np.median(runs)*1e3:7.3f} ms "

@@ -1,11 +1,17 @@
-"""Tune a REAL Pallas kernel by wall-clock measurement.
+"""Tune a REAL Pallas kernel by wall-clock measurement — via the facade.
 
 Runs the actual ``pl.pallas_call`` add kernel in interpret mode on small
 images and lets the GA pick block geometry by measured time — the paper's
-loop with a real measurement function (DESIGN.md 2.2 backend 2).  Interpret
-mode timings reflect Python-level grid overhead rather than TPU behaviour,
-so this example is about exercising the full real-measurement path, not
-about the specific winner.
+loop with a real measurement function (DESIGN.md 2.2 backend 2).  The
+measurement chain is declared through the ``BACKENDS`` registry: a
+``"cached"`` backend (one measurement per distinct config, per the paper)
+wrapping a ``"timing"`` backend around the kernel runner.  Interpret mode
+timings reflect Python-level grid overhead rather than TPU behaviour, so
+this example is about exercising the full real-measurement path, not about
+the specific winner.
+
+Specs whose backend kwargs hold live callables work in-process but cannot
+be serialized or sharded — name-only backends (``"costmodel"``) can.
 
     PYTHONPATH=src python examples/tune_kernel_interpret.py
 """
@@ -13,7 +19,8 @@ about the specific winner.
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import CachedMeasurement, Param, SearchSpace, TimingMeasurement, make_searcher
+import repro
+from repro.core import Param, SearchSpace, TuningSpec
 from repro.kernels import add
 
 X, Y = 256, 512
@@ -40,12 +47,23 @@ def main() -> None:
     def run_kernel(cfg):
         np.asarray(add(a, b, cfg))  # block until done
 
-    m = CachedMeasurement(TimingMeasurement(run_kernel, warmup=1))
-    r = make_searcher("ga", space, seed=0).run(m, BUDGET)
+    spec = TuningSpec(
+        kernel="add_interpret",
+        searcher="ga",
+        backend="cached",
+        backend_kwargs={
+            "inner": "timing",
+            "inner_kwargs": {"runner": run_kernel, "warmup": 1},
+        },
+        space=space,
+        budget=BUDGET,
+        final_repeats=5,
+        seed=0,
+    )
+    r = repro.tune(spec)
     print(f"GA best config after {r.n_samples} real kernel timings: {r.best_config}")
     print(f"measured {r.best_value*1e3:.2f} ms per call (interpret mode)")
-    final = m.measure_final(r.best_config, repeats=5)
-    print(f"final config re-measured 5x (paper protocol): {final*1e3:.2f} ms")
+    print(f"final config re-measured 5x (paper protocol): {r.final_value*1e3:.2f} ms")
 
 
 if __name__ == "__main__":

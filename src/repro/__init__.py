@@ -1,0 +1,44 @@
+"""repro — reproduction of "Analyzing Search Techniques for Autotuning
+Image-based GPU Kernels: The Impact of Sample Sizes", grown toward a
+production-scale jax/Pallas autotuning system.
+
+The public front door is the declarative tuning facade::
+
+    import repro
+    from repro.core import ExperimentDesign, TuningSpec
+
+    result = repro.tune(TuningSpec(kernel="harris", searcher="ga", budget=100))
+    matrix = repro.tune_matrix(
+        TuningSpec(kernel="harris", algorithms=("rs", "ga", "bo_tpe"),
+                   design=ExperimentDesign.scaled(budget=500)),
+        shards=2,
+    )
+
+See ``docs/public_api.md`` for the spec schema and the backend registry.
+"""
+
+from .core.api import (
+    RunRecord,
+    TuningSession,
+    TuningSpec,
+    register_constraint,
+    tune,
+    tune_matrix,
+)
+from .core.backends import BACKENDS, Backend, make_measurement, register_backend
+from .core.stores import STORES, make_store
+
+__all__ = [
+    "BACKENDS",
+    "Backend",
+    "RunRecord",
+    "STORES",
+    "TuningSession",
+    "TuningSpec",
+    "make_measurement",
+    "make_store",
+    "register_backend",
+    "register_constraint",
+    "tune",
+    "tune_matrix",
+]

@@ -1,6 +1,6 @@
 """repro.core — the paper's contribution: sample-size-aware empirical
-autotuning with RS / RF / GA / BO-GP / BO-TPE searchers and the
-MWU + CLES statistics layer."""
+autotuning with RS / RF / GA / BO-GP / BO-TPE searchers, the MWU + CLES
+statistics layer, and the declarative ``tune()`` facade on top."""
 
 from .space import Config, Param, SearchSpace, paper_space
 from .measurement import (
@@ -15,9 +15,11 @@ from .engine import (
     config_key,
     drive,
 )
+from .stores import STORES, SqliteMeasurementStore, make_store
+from .backends import BACKENDS, Backend, make_measurement, register_backend
 from .experiment import ExperimentDesign
 from .dataset import SampleDataset
-from .runner import CellResult, MatrixResults, MatrixRunner
+from .runner import CellResult, MatrixResults, MatrixRunner, stable_seed
 from .searchers import (
     EXTRA_ALGORITHMS,
     PAPER_ALGORITHMS,
@@ -25,6 +27,14 @@ from .searchers import (
     Searcher,
     TuningResult,
     make_searcher,
+)
+from .api import (
+    RunRecord,
+    TuningSession,
+    TuningSpec,
+    register_constraint,
+    tune,
+    tune_matrix,
 )
 from . import stats
 
@@ -39,6 +49,13 @@ __all__ = [
     "TimingMeasurement",
     "DiskCachedMeasurement",
     "MeasurementStore",
+    "SqliteMeasurementStore",
+    "STORES",
+    "make_store",
+    "BACKENDS",
+    "Backend",
+    "make_measurement",
+    "register_backend",
     "config_key",
     "drive",
     "ExperimentDesign",
@@ -46,11 +63,18 @@ __all__ = [
     "CellResult",
     "MatrixResults",
     "MatrixRunner",
+    "stable_seed",
     "SEARCHERS",
     "PAPER_ALGORITHMS",
     "EXTRA_ALGORITHMS",
     "Searcher",
     "TuningResult",
     "make_searcher",
+    "RunRecord",
+    "TuningSession",
+    "TuningSpec",
+    "register_constraint",
+    "tune",
+    "tune_matrix",
     "stats",
 ]

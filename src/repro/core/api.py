@@ -1,0 +1,768 @@
+"""The public tuning facade: ``repro.tune(spec)`` / ``repro.tune_matrix(spec)``.
+
+One declarative entry point replaces the bespoke wiring that used to live in
+`MatrixRunner`, `Searcher.run`, the benchmark scripts, and the examples:
+
+* :class:`TuningSpec` — a frozen, JSON-serializable description of a tuning
+  run: kernel/objective id, search space, searcher name + kwargs, measurement
+  backend name + kwargs (resolved via :mod:`repro.core.backends`), a sample
+  budget or an :class:`ExperimentDesign`, seed, and cache/store settings.
+* :class:`TuningSession` — the driver that owns evaluation: it runs the
+  ask/tell loop (through the engine's ``drive`` primitive, on
+  ``Searcher.start/ask/tell/finish`` + ``MeasurementStore``), runs single
+  searches and full experiment matrices, and fans matrix cells out across
+  ``multiprocessing`` workers (``shards=N``) with per-shard stores merged at
+  the end.  Cell seeds derive from the spec alone, so sharded and
+  single-process runs are bit-identical.
+* :class:`RunRecord` — a versioned JSON schema (spec + result summary +
+  provenance) emitted next to each saved result; the stats/figure layer
+  consumes it.
+
+Example::
+
+    import repro
+    from repro.core import TuningSpec
+
+    result = repro.tune(TuningSpec(kernel="harris", searcher="ga", budget=100))
+    print(result.best_config, result.final_value)
+
+    matrix = repro.tune_matrix(
+        TuningSpec(kernel="harris", algorithms=("rs", "ga"),
+                   design=ExperimentDesign.scaled(budget=500)),
+        shards=2,
+    )
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import platform
+import socket
+import time
+from dataclasses import dataclass, field, replace
+from datetime import datetime, timezone
+from typing import Callable
+
+import numpy as np
+
+from .backends import BACKENDS, make_measurement
+from .dataset import SampleDataset
+from .engine import DISPATCH_MODES, DiskCachedMeasurement, drive
+from .experiment import ExperimentDesign
+from .measurement import BaseMeasurement
+from .runner import CellResult, MatrixResults, stable_seed
+from .searchers import SEARCHERS, make_searcher
+from .searchers.base import TuningResult
+from .space import Config, Param, SearchSpace, _paper_wg256
+from .stores import STORES, make_store
+from .surrogates.forest_batched import BatchedForest
+
+SPEC_VERSION = 1
+RUN_RECORD_VERSION = 1
+
+__all__ = [
+    "RUN_RECORD_VERSION",
+    "SPEC_VERSION",
+    "RunRecord",
+    "TuningSession",
+    "TuningSpec",
+    "register_constraint",
+    "tune",
+    "tune_matrix",
+]
+
+
+# ------------------------------------------------------- space serialization
+
+#: named constraints a serialized spec can refer to.  ``vmem:<kernel>:<chip>``
+#: ids are resolved dynamically against the costmodel backend.
+CONSTRAINTS: dict[str, Callable[[Config], bool]] = {
+    "paper_wg256": _paper_wg256,
+}
+
+
+def register_constraint(name: str, fn: Callable[[Config], bool]):
+    """Register a constraint predicate under a stable id so spaces using it
+    survive TuningSpec JSON round-trips."""
+    fn.constraint_id = name
+    CONSTRAINTS[name] = fn
+    return fn
+
+
+def _resolve_constraint(cid: str | None) -> Callable[[Config], bool] | None:
+    if cid is None:
+        return None
+    if cid in CONSTRAINTS:
+        return CONSTRAINTS[cid]
+    if cid.startswith("vmem:"):
+        from ..costmodel import CHIPS, WORKLOADS, is_executable
+
+        _, kernel, chip = cid.split(":")
+        w, c = WORKLOADS[kernel], CHIPS[chip]
+
+        def fn(cfg: Config) -> bool:
+            return is_executable(w, c, cfg)
+
+        fn.constraint_id = cid
+        return fn
+    raise KeyError(
+        f"unknown constraint id {cid!r}; register it with "
+        f"repro.core.api.register_constraint(name, fn)"
+    )
+
+
+def space_to_dict(space: SearchSpace) -> dict:
+    cid = getattr(space.constraint, "constraint_id", None)
+    if space.constraint is not None and cid is None:
+        raise ValueError(
+            "SearchSpace constraint is not serializable: give the predicate a "
+            "stable id via register_constraint(name, fn), or leave "
+            "TuningSpec.space=None so the backend derives the space"
+        )
+    return {
+        "params": [{"name": p.name, "values": list(p.values)} for p in space.params],
+        "constraint": cid,
+    }
+
+
+def space_from_dict(d: dict) -> SearchSpace:
+    params = [Param(p["name"], tuple(p["values"])) for p in d["params"]]
+    return SearchSpace(params, constraint=_resolve_constraint(d.get("constraint")))
+
+
+# ---------------------------------------------------------------- TuningSpec
+
+
+@dataclass(frozen=True)
+class TuningSpec:
+    """Declarative description of a tuning run (frozen, JSON-serializable).
+
+    ``budget`` drives a single :func:`tune`; ``design`` (+ ``algorithms``)
+    drives a :func:`tune_matrix`.  ``space=None`` derives the search space
+    from the backend (the costmodel backend yields the executable-config
+    space for ``kernel`` x ``chip``).  ``store``/``store_path`` select the
+    persistent measurement cache (``"json"`` default file store or
+    ``"sqlite"`` for paper-exact multi-million-sample designs).
+    ``searcher_kwargs`` apply to the named ``searcher`` only — other
+    algorithms on a matrix axis run with their own defaults.
+    """
+
+    kernel: str
+    searcher: str = "ga"
+    searcher_kwargs: dict = field(default_factory=dict)
+    backend: str = "costmodel"
+    backend_kwargs: dict = field(default_factory=dict)
+    space: SearchSpace | None = None
+    budget: int | None = None
+    design: ExperimentDesign | None = None
+    algorithms: tuple[str, ...] | None = None
+    seed: int = 0
+    dispatch: str = "batch"
+    final_repeats: int = 10
+    store: str | None = None
+    store_path: str | None = None
+    cache_key: str | None = None
+    dataset_size: int | None = None
+    dataset_seed: int = 7
+    dataset_gen_seed: int = 999
+    dataset_cache: str | None = None
+
+    def __post_init__(self):
+        if not self.kernel or not isinstance(self.kernel, str):
+            raise ValueError("TuningSpec.kernel must be a non-empty string id")
+        if self.searcher not in SEARCHERS:
+            raise KeyError(
+                f"unknown searcher {self.searcher!r}; have {sorted(SEARCHERS)}"
+            )
+        if self.backend not in BACKENDS:
+            raise KeyError(
+                f"unknown backend {self.backend!r}; have {sorted(BACKENDS)}"
+            )
+        if self.dispatch not in DISPATCH_MODES:
+            raise ValueError(f"dispatch must be one of {DISPATCH_MODES}")
+        if self.store is not None and self.store not in STORES:
+            raise KeyError(f"unknown store {self.store!r}; have {sorted(STORES)}")
+        if self.budget is not None and self.budget < 1:
+            raise ValueError("budget must be >= 1")
+        if isinstance(self.design, dict):
+            object.__setattr__(self, "design", ExperimentDesign.from_dict(self.design))
+        if self.algorithms is not None:
+            algos = tuple(self.algorithms)
+            unknown = [a for a in algos if a not in SEARCHERS]
+            if unknown:
+                raise KeyError(f"unknown algorithms {unknown}; have {sorted(SEARCHERS)}")
+            object.__setattr__(self, "algorithms", algos)
+        object.__setattr__(self, "searcher_kwargs", dict(self.searcher_kwargs))
+        object.__setattr__(self, "backend_kwargs", dict(self.backend_kwargs))
+
+    # -- derived --------------------------------------------------------------
+    @property
+    def matrix_algorithms(self) -> tuple[str, ...]:
+        return self.algorithms if self.algorithms is not None else (self.searcher,)
+
+    def default_cache_key(self) -> str:
+        chip = self.backend_kwargs.get("chip")
+        return f"{self.kernel}/{chip}" if chip else f"{self.kernel}/{self.backend}"
+
+    def replace(self, **changes) -> "TuningSpec":
+        return replace(self, **changes)
+
+    # -- serialization --------------------------------------------------------
+    def to_dict(self) -> dict:
+        return {
+            "spec_version": SPEC_VERSION,
+            "kernel": self.kernel,
+            "searcher": self.searcher,
+            "searcher_kwargs": dict(self.searcher_kwargs),
+            "backend": self.backend,
+            "backend_kwargs": dict(self.backend_kwargs),
+            "space": None if self.space is None else space_to_dict(self.space),
+            "budget": self.budget,
+            "design": None if self.design is None else self.design.to_dict(),
+            "algorithms": None if self.algorithms is None else list(self.algorithms),
+            "seed": self.seed,
+            "dispatch": self.dispatch,
+            "final_repeats": self.final_repeats,
+            "store": self.store,
+            "store_path": self.store_path,
+            "cache_key": self.cache_key,
+            "dataset_size": self.dataset_size,
+            "dataset_seed": self.dataset_seed,
+            "dataset_gen_seed": self.dataset_gen_seed,
+            "dataset_cache": self.dataset_cache,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TuningSpec":
+        d = dict(d)
+        version = d.pop("spec_version", SPEC_VERSION)
+        if version > SPEC_VERSION:
+            raise ValueError(
+                f"spec_version {version} is newer than supported {SPEC_VERSION}"
+            )
+        if d.get("space") is not None:
+            d["space"] = space_from_dict(d["space"])
+        if d.get("design") is not None:
+            d["design"] = ExperimentDesign.from_dict(d["design"])
+        if d.get("algorithms") is not None:
+            d["algorithms"] = tuple(d["algorithms"])
+        return cls(**d)
+
+    def to_json(self, **kwargs) -> str:
+        try:
+            return json.dumps(self.to_dict(), **kwargs)
+        except TypeError as e:
+            raise TypeError(
+                f"TuningSpec is not JSON-serializable ({e}). Backends wired "
+                "with in-process callables (timing runners, raw measurement "
+                "instances) cannot be serialized or sharded — name the "
+                "backend and pass plain kwargs instead."
+            ) from e
+
+    @classmethod
+    def from_json(cls, s: str) -> "TuningSpec":
+        return cls.from_dict(json.loads(s))
+
+
+# ----------------------------------------------------------------- RunRecord
+
+
+def _provenance(wall_s: float | None = None) -> dict:
+    p = {
+        "created_at": datetime.now(timezone.utc).isoformat(timespec="seconds"),
+        "hostname": socket.gethostname(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "numpy": np.__version__,
+    }
+    if wall_s is not None:
+        p["wall_s"] = round(float(wall_s), 3)
+    return p
+
+
+@dataclass
+class RunRecord:
+    """Versioned provenance record written alongside saved results.
+
+    ``result`` holds a JSON summary (per-cell medians for a matrix, the best
+    config for a single run) plus ``artifact`` — the relative path of the
+    full ``.npz`` payload when one was saved.  The figure layer reads the
+    ``true_optimum`` (falling back to ``best_observed``) as the
+    pct-of-optimum denominator.
+    """
+
+    kind: str                      # "tune" | "tune_matrix"
+    spec: dict
+    result: dict
+    provenance: dict
+    extra: dict = field(default_factory=dict)
+    version: int = RUN_RECORD_VERSION
+
+    def to_dict(self) -> dict:
+        return {
+            "run_record_version": self.version,
+            "kind": self.kind,
+            "spec": self.spec,
+            "result": self.result,
+            "provenance": self.provenance,
+            "extra": self.extra,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RunRecord":
+        return cls(
+            kind=d["kind"],
+            spec=d["spec"],
+            result=d["result"],
+            provenance=d.get("provenance", {}),
+            extra=d.get("extra", {}),
+            version=d.get("run_record_version", RUN_RECORD_VERSION),
+        )
+
+    def save(self, path: str) -> None:
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=2)
+
+    @classmethod
+    def load(cls, path: str) -> "RunRecord":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+
+# -------------------------------------------------------------- TuningSession
+
+
+class TuningSession:
+    """Drives tuning runs described by a :class:`TuningSpec`.
+
+    The session owns evaluation end to end: it builds searchers and
+    measurement backends from the spec (via the ``SEARCHERS`` / ``BACKENDS``
+    registries), drives the ask/tell loop (the engine's ``drive`` primitive),
+    wraps measurements in the persistent store cache when configured,
+    re-measures winners per the paper's final-repeats protocol, and — for
+    matrix runs — fans cells out across processes (:meth:`run_matrix` with
+    ``shards > 1``).
+
+    Keyword overrides (``space`` / ``measurement_factory`` / ``dataset`` /
+    ``store``) exist for in-process callers that hold live objects (the
+    deprecated ``MatrixRunner`` shim); a session with overrides cannot be
+    sharded because workers rebuild everything from the serialized spec.
+    """
+
+    def __init__(
+        self,
+        spec: TuningSpec,
+        *,
+        space: SearchSpace | None = None,
+        measurement_factory: Callable[[int], BaseMeasurement] | None = None,
+        dataset: SampleDataset | None = None,
+        store=None,
+        store_path: str | None = None,
+        verbose: bool = False,
+    ):
+        if not isinstance(spec, TuningSpec):
+            raise TypeError(f"spec must be a TuningSpec, got {type(spec).__name__}")
+        self.spec = spec
+        self.verbose = verbose
+        self._backend = BACKENDS[spec.backend]
+        self._has_overrides = any(
+            x is not None for x in (space, measurement_factory, dataset, store)
+        )
+        self.space = space if space is not None else spec.space
+        if self.space is None and self._backend.default_space is not None:
+            self.space = self._backend.default_space(
+                kernel=spec.kernel, **spec.backend_kwargs
+            )
+        if self.space is None:
+            raise ValueError(
+                f"backend {spec.backend!r} has no default space; set "
+                "TuningSpec.space explicitly"
+            )
+        self._factory = measurement_factory or (
+            lambda s: make_measurement(
+                spec.backend, kernel=spec.kernel, seed=s, **spec.backend_kwargs
+            )
+        )
+        self._store_path = store_path if store_path is not None else spec.store_path
+        if store is not None:
+            self.store = store
+        elif spec.store is not None:
+            self.store = make_store(spec.store, self._store_path)
+        else:
+            self.store = None
+        self.cache_key = spec.cache_key or spec.default_cache_key()
+        self._dataset = dataset
+        self.measurement: BaseMeasurement | None = None  # last single-run backend
+        self.last_record: RunRecord | None = None
+
+    # -- wiring ---------------------------------------------------------------
+    def _make_measurement(self, exp_seed: int) -> BaseMeasurement:
+        m = self._factory(exp_seed)
+        if self.store is not None:
+            m = DiskCachedMeasurement(
+                m, self.store, prefix=f"{self.cache_key}/seed={exp_seed}"
+            )
+        return m
+
+    def _get_dataset(self) -> SampleDataset | None:
+        if self._dataset is None and self.spec.dataset_size:
+            self._dataset = SampleDataset.generate(
+                self.space,
+                self._factory(self.spec.dataset_gen_seed),
+                n=self.spec.dataset_size,
+                seed=self.spec.dataset_seed,
+                cache_path=self.spec.dataset_cache,
+            )
+        return self._dataset
+
+    def save_store(self) -> None:
+        if self.store is not None:
+            self.store.save()
+
+    # -- single run (the ask/tell loop lives HERE) ----------------------------
+    def run(self) -> TuningResult:
+        """One budgeted search + the paper's final re-measurement."""
+        spec = self.spec
+        if spec.budget is None:
+            raise ValueError("TuningSpec.budget is required for tune(); "
+                            "use tune_matrix() for design-driven runs")
+        t0 = time.time()
+        searcher = make_searcher(
+            spec.searcher, self.space, seed=spec.seed, **spec.searcher_kwargs
+        )
+        measurement = self.measurement = self._make_measurement(spec.seed)
+        result = drive(searcher, measurement, spec.budget, dispatch=spec.dispatch)
+        result.final_value = measurement.measure_final(
+            result.best_config, spec.final_repeats
+        )
+        self.save_store()
+        self.last_record = RunRecord(
+            kind="tune",
+            spec=self._spec_dict_or_repr(),
+            result={
+                "best_config": result.best_config,
+                "best_value": result.best_value,
+                "final_value": result.final_value,
+                "n_samples": result.n_samples,
+            },
+            provenance=_provenance(time.time() - t0),
+        )
+        return result
+
+    # -- matrix runs ----------------------------------------------------------
+    def cells(self) -> list[tuple[str, int, int]]:
+        """Canonical cell order: ``(algo, sample_size, n_experiments)``."""
+        if self.spec.design is None:
+            raise ValueError("TuningSpec.design is required for matrix runs")
+        return [
+            (algo, s, e)
+            for algo in self.spec.matrix_algorithms
+            for s, e in self.spec.design.rows()
+        ]
+
+    def run_matrix(self, shards: int = 1) -> MatrixResults:
+        t0 = time.time()
+        cells = self.cells()
+        if shards > 1 and len(cells) > 1:
+            cell_results = self._run_sharded(cells, shards)
+        else:
+            cell_results = [self.run_cell(a, s, e) for a, s, e in cells]
+        results = MatrixResults()
+        for cell in cell_results:
+            results.add(cell)
+        self.save_store()
+        self.last_record = self.make_record(results, wall_s=time.time() - t0)
+        return results
+
+    def run_cell(self, algo: str, sample_size: int, n_exp: int) -> CellResult:
+        """All experiments of one (algorithm, sample-size) cell.
+
+        Experiment seeds derive from ``(spec.seed, algo, sample_size, e)``
+        alone, so any process can run any cell and get identical results.
+        """
+        spec = self.spec
+        dataset = self._get_dataset()
+        finals = np.empty(n_exp)
+        search_best = np.empty(n_exp)
+        n_used = np.empty(n_exp, dtype=np.int64)
+        rf_batch = (
+            self._rf_cell_batched(sample_size, n_exp)
+            if (dataset is not None and algo == "rf")
+            else None
+        )
+        for e in range(n_exp):
+            exp_seed = stable_seed(spec.seed, algo, sample_size, e)
+            measurement = self._make_measurement(exp_seed)
+            if rf_batch is not None:
+                tr = rf_batch[e]
+            elif dataset is not None and algo == "rs":
+                tr = self._rs_from_dataset(e, sample_size)
+            else:
+                # searcher_kwargs belong to the spec's named searcher; other
+                # algorithms on the matrix axis use their own defaults (SA
+                # would reject GA's pop_size, etc.)
+                kwargs = spec.searcher_kwargs if algo == spec.searcher else {}
+                searcher = make_searcher(algo, self.space, seed=exp_seed, **kwargs)
+                tr = searcher.run(measurement, sample_size, dispatch=spec.dispatch)
+            finals[e] = measurement.measure_final(
+                tr.best_config, spec.design.final_repeats
+            )
+            search_best[e] = tr.best_value
+            n_used[e] = tr.n_samples
+        if self.verbose:
+            print(
+                f"[session] {algo:7s} S={sample_size:4d} E={n_exp:4d} "
+                f"median={np.median(finals):.6g} best={finals.min():.6g}"
+            )
+        return CellResult(
+            algo=algo,
+            sample_size=sample_size,
+            final_values=finals,
+            search_best_values=search_best,
+            n_samples_used=n_used,
+        )
+
+    # -- dataset-served paths (paper section VI.B) ---------------------------
+    def _rs_from_dataset(self, experiment: int, budget: int) -> TuningResult:
+        dataset = self._get_dataset()
+        idx, vals = dataset.chunk(experiment, budget)
+        j = int(np.argmin(vals))
+        return TuningResult(
+            algo="rs",
+            best_config=self.space.decode(idx[j]),
+            best_value=float(vals[j]),
+            history_values=list(vals),
+            history_configs=[],
+            n_samples=budget,
+        )
+
+    def _rf_cell_batched(
+        self, sample_size: int, n_exp: int, rf_pool: int = 2048
+    ) -> list[TuningResult]:
+        """All RF experiments of one sample-size cell, fit in ONE vectorized
+        histogram-forest pass (see surrogates/forest_batched.py).  Semantics
+        per experiment match the paper: train on a disjoint S-10 dataset
+        chunk, measure the model's top-10 predictions over a candidate pool,
+        keep the best prediction."""
+        spec = self.spec
+        dataset = self._get_dataset()
+        top_k = min(10, max(1, sample_size // 2))
+        n_train = sample_size - top_k
+        chunks = [dataset.chunk(e, n_train) for e in range(n_exp)]
+        Xc = np.stack([c[0] for c in chunks])
+        yc = np.stack([c[1] for c in chunks])
+        forest = BatchedForest(
+            self.space.cardinalities, n_estimators=100, seed=spec.seed
+        )
+        forest.fit(Xc, yc)
+        pool_rng = np.random.default_rng(spec.seed + 7)
+        pool = self.space.sample_indices(pool_rng, rf_pool)
+        preds = forest.predict(pool)                    # (E, P)
+        results = []
+        for e in range(n_exp):
+            exp_seed = stable_seed(spec.seed, "rf", sample_size, e)
+            measurement = self._make_measurement(exp_seed)
+            best = np.argsort(preds[e], kind="stable")[:top_k]
+            run_vals = measurement.measure_batch(self.space.decode_batch(pool[best]))
+            j = int(np.argmin(run_vals))
+            results.append(
+                TuningResult(
+                    algo="rf",
+                    best_config=self.space.decode(pool[best][j]),
+                    best_value=float(run_vals[j]),
+                    history_values=list(yc[e]) + list(run_vals),
+                    history_configs=[],
+                    n_samples=sample_size,
+                )
+            )
+        return results
+
+    # -- sharded fan-out ------------------------------------------------------
+    def _shard_store_path(self, shard: int) -> str | None:
+        if self.spec.store is None or self._store_path is None:
+            return None
+        return f"{self._store_path}.shard{shard}"
+
+    def _run_sharded(self, cells, shards: int) -> list[CellResult]:
+        import multiprocessing
+
+        if self._has_overrides:
+            raise RuntimeError(
+                "sharded matrix runs rebuild the session from the serialized "
+                "spec in worker processes; in-process overrides (space/"
+                "measurement_factory/dataset/store objects) cannot be shipped"
+            )
+        if not self._backend.serializable:
+            raise RuntimeError(
+                f"backend {self.spec.backend!r} holds in-process callables and "
+                "cannot be rebuilt in shard workers; use a name-resolvable "
+                "backend (e.g. 'costmodel') for sharded runs"
+            )
+        spec_dict = self.spec.to_dict()  # raises early if not serializable
+        # generate the shared dataset ONCE in the parent and ship it to the
+        # workers, so N shards don't redo the 20k-sample generation (and the
+        # run record keeps dataset_best)
+        dataset = self._get_dataset()
+        dataset_payload = (
+            None if dataset is None else (dataset.indices, dataset.values)
+        )
+        shards = min(shards, len(cells))
+        parts = [cells[k::shards] for k in range(shards)]
+        payloads = [
+            {
+                "spec": spec_dict,
+                "cells": parts[k],
+                "store_path": self._shard_store_path(k),
+                "dataset": dataset_payload,
+            }
+            for k in range(shards)
+        ]
+        ctx = multiprocessing.get_context("spawn")
+        with ctx.Pool(processes=shards) as pool:
+            shard_results = pool.map(_shard_worker, payloads)
+        self._merge_shard_stores(shards)
+        by_key = {}
+        for part, res in zip(parts, shard_results):
+            for (algo, s, _), cell in zip(part, res):
+                by_key[(algo, s)] = cell
+        return [by_key[(algo, s)] for algo, s, _ in cells]
+
+    def _merge_shard_stores(self, shards: int) -> None:
+        if self.store is None:
+            return
+        for k in range(shards):
+            path = self._shard_store_path(k)
+            if path is None or not os.path.exists(path):
+                continue
+            shard_store = make_store(self.spec.store, path)
+            self.store.update(shard_store.items())
+            if hasattr(shard_store, "close"):
+                shard_store.close()
+            os.remove(path)
+        self.store.save()
+
+    # -- records --------------------------------------------------------------
+    def _spec_dict_or_repr(self) -> dict:
+        try:
+            return self.spec.to_dict()
+        except (TypeError, ValueError):
+            return {"repr": repr(self.spec)}
+
+    def make_record(
+        self,
+        results: MatrixResults,
+        wall_s: float | None = None,
+        artifact: str | None = None,
+        extra: dict | None = None,
+        with_optimum: bool = False,
+    ) -> RunRecord:
+        result = {
+            "best_observed": float(results.optimum),
+            "cells": [
+                {
+                    "algo": algo,
+                    "sample_size": s,
+                    "n_experiments": int(len(cell.final_values)),
+                    "median_final": float(np.median(cell.final_values)),
+                    "best_final": float(cell.final_values.min()),
+                }
+                for (algo, s), cell in sorted(results.cells.items())
+            ],
+        }
+        if artifact is not None:
+            result["artifact"] = artifact
+        if (
+            with_optimum
+            and self._backend.true_optimum is not None
+            and not self._has_overrides
+        ):
+            cfg, opt = self._backend.true_optimum(
+                kernel=self.spec.kernel, **self.spec.backend_kwargs
+            )
+            result["true_optimum"] = float(opt)
+            result["true_optimum_config"] = cfg
+        dataset = self._dataset
+        if dataset is not None:
+            result["dataset_best"] = float(dataset.optimum)
+        return RunRecord(
+            kind="tune_matrix",
+            spec=self._spec_dict_or_repr(),
+            result=result,
+            provenance=_provenance(wall_s),
+            extra=dict(extra or {}),
+        )
+
+
+def _shard_worker(payload: dict) -> list[CellResult]:
+    """Runs one shard's cells in a worker process (spawned; rebuilds the
+    session from the serialized spec; the parent ships the pre-generated
+    sample dataset so workers never regenerate it)."""
+    spec = TuningSpec.from_dict(payload["spec"])
+    session = TuningSession(spec, store_path=payload["store_path"])
+    if payload.get("dataset") is not None:
+        indices, values = payload["dataset"]
+        session._dataset = SampleDataset(
+            space=session.space, indices=indices, values=values
+        )
+    out = [session.run_cell(algo, s, e) for algo, s, e in payload["cells"]]
+    session.save_store()
+    return out
+
+
+# -------------------------------------------------------------------- facade
+
+
+def tune(
+    spec: TuningSpec, *, record_path: str | None = None, verbose: bool = False
+) -> TuningResult:
+    """Run one budgeted search described by ``spec``.
+
+    Returns the budget-audited :class:`TuningResult` with ``final_value``
+    filled by the paper's median-of-``final_repeats`` re-measurement.  When
+    ``record_path`` is given, a :class:`RunRecord` JSON lands there.
+    """
+    session = TuningSession(spec, verbose=verbose)
+    result = session.run()
+    if record_path is not None:
+        session.last_record.save(record_path)
+    return result
+
+
+def tune_matrix(
+    spec: TuningSpec,
+    *,
+    shards: int = 1,
+    out_dir: str | None = None,
+    verbose: bool = False,
+    extra: dict | None = None,
+) -> MatrixResults:
+    """Run the (algorithms x design) experiment matrix described by ``spec``.
+
+    ``shards=N`` fans cells out across N worker processes; per-cell seeds
+    derive from the spec, so sharded and single-process runs are
+    bit-identical.  When ``out_dir`` is given, the full results land in
+    ``<cache_key>.npz`` with a versioned :class:`RunRecord` JSON (including
+    the backend's true optimum, when it can compute one) next to it.
+    """
+    session = TuningSession(spec, verbose=verbose)
+    t0 = time.time()
+    results = session.run_matrix(shards=shards)
+    if out_dir is not None:
+        name = (spec.cache_key or spec.default_cache_key()).replace("/", "_")
+        os.makedirs(out_dir, exist_ok=True)
+        artifact = f"{name}.npz"
+        results.save(os.path.join(out_dir, artifact))
+        record = session.make_record(
+            results,
+            wall_s=time.time() - t0,
+            artifact=artifact,
+            extra=extra,
+            with_optimum=True,
+        )
+        record.save(os.path.join(out_dir, f"{name}.json"))
+        session.last_record = record
+    return results

@@ -104,6 +104,17 @@ class MeasurementStore:
     def get(self, key: str) -> float | None:
         return self._data.get(key)
 
+    def items(self):
+        return self._data.items()
+
+    def update(self, entries) -> None:
+        """Bulk-insert ``(key, value)`` pairs (shard-store merging).  Entries
+        are only marked dirty — call :meth:`save` once after the last batch
+        so an N-shard merge doesn't rewrite the file N times."""
+        for k, v in entries:
+            self._data[k] = float(v)
+            self._dirty += 1
+
     def put(self, key: str, value: float) -> None:
         self._data[key] = float(value)
         self._dirty += 1

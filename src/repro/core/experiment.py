@@ -17,7 +17,7 @@ pre-generated dataset used by the non-SMBO methods (section VI.B).
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)
@@ -49,6 +49,22 @@ class ExperimentDesign:
     def smoke(cls) -> "ExperimentDesign":
         """Tiny design for tests."""
         return cls(sample_sizes=(25, 50), n_experiments=(8, 4), final_repeats=3)
+
+    # -- serialization (TuningSpec round-trips through JSON) -----------------
+    def to_dict(self) -> dict:
+        return {
+            "sample_sizes": list(self.sample_sizes),
+            "n_experiments": list(self.n_experiments),
+            "final_repeats": self.final_repeats,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExperimentDesign":
+        return cls(
+            sample_sizes=tuple(int(s) for s in d["sample_sizes"]),
+            n_experiments=tuple(int(e) for e in d["n_experiments"]),
+            final_repeats=int(d.get("final_repeats", 10)),
+        )
 
     @property
     def total_search_samples(self) -> int:

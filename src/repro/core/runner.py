@@ -1,19 +1,21 @@
-"""Matrix runner: algorithms x sample sizes x experiments (paper section V-VI).
+"""Matrix result containers + the deprecated :class:`MatrixRunner` shim.
 
-Responsibilities:
-  * run E independent experiments per (algorithm, sample size) cell with
-    independent seeds / noise streams,
-  * serve the non-SMBO methods (RS, RF-training) from the 20k pre-generated
-    :class:`SampleDataset` exactly as the paper does,
-  * re-measure every experiment's winning config ``final_repeats`` (10) times
-    and record the median as the experiment result,
-  * persist results as .npz + JSON for the statistics/figure layer.
+The matrix driver itself lives in :mod:`repro.core.api` now: a
+:class:`~repro.core.api.TuningSession` built from a declarative
+:class:`~repro.core.api.TuningSpec` owns the (algorithm x sample-size x
+experiment) loop, the dataset-served non-SMBO paths, the persistent
+measurement store, and the multiprocess ``shards=N`` fan-out.  This module
+keeps the result dataclasses (:class:`CellResult`, :class:`MatrixResults`),
+the :func:`stable_seed` helper every layer derives experiment seeds from,
+and ``MatrixRunner`` — a thin deprecated facade over the session for callers
+that hold live space/measurement objects.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import warnings
 import zlib
 from dataclasses import dataclass, field
 
@@ -25,14 +27,12 @@ def stable_seed(*parts) -> int:
     process-salted and would break run-to-run reproducibility)."""
     return zlib.crc32("|".join(map(str, parts)).encode()) & 0x7FFFFFFF
 
+
 from .dataset import SampleDataset
-from .engine import DISPATCH_MODES, DiskCachedMeasurement, MeasurementStore
+from .engine import DISPATCH_MODES, MeasurementStore
 from .experiment import ExperimentDesign
-from .measurement import BaseMeasurement
-from .searchers import SEARCHERS, make_searcher
-from .searchers.base import TuningResult
+from .searchers import SEARCHERS
 from .space import SearchSpace
-from .surrogates.forest_batched import BatchedForest
 
 
 @dataclass
@@ -93,18 +93,16 @@ class MatrixResults:
 
 
 class MatrixRunner:
-    """Executes the (algorithm x sample-size x experiment) matrix through the
-    batched ask/tell engine.
+    """Deprecated shim: delegates to :class:`repro.core.api.TuningSession`.
 
-    ``dispatch`` selects the engine driver: ``"batch"`` (default) routes each
-    proposal batch through ``measure_batch`` — ONE Python-level dispatch per
-    batch on the vectorized cost-model backend; ``"one"`` measures config-by-
-    config (the parity-audit path; per-cell ``n_samples_used`` is identical).
+    Prefer the declarative facade::
 
-    ``store`` (a :class:`MeasurementStore`) enables the persistent on-disk
-    cache: every served value is memoized under
-    ``{cache_key}/seed={exp_seed}|{config}``, so re-running a matrix cell —
-    same kernel, same experiment stream — never re-measures.
+        repro.tune_matrix(TuningSpec(kernel=..., algorithms=..., design=...))
+
+    This class remains for callers that hold live objects (a constructed
+    space, a measurement factory closure, a pre-generated dataset); it wires
+    them into a session as in-process overrides.  Such sessions cannot be
+    sharded — use a fully spec-described ``tune_matrix`` for that.
     """
 
     def __init__(
@@ -120,126 +118,35 @@ class MatrixRunner:
         store: MeasurementStore | None = None,
         cache_key: str = "",
     ):
+        warnings.warn(
+            "MatrixRunner is deprecated; use repro.tune_matrix(TuningSpec(...))",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         unknown = [a for a in algorithms if a not in SEARCHERS]
         if unknown:
             raise KeyError(f"unknown algorithms {unknown}")
         if dispatch not in DISPATCH_MODES:
             raise ValueError(f"dispatch must be one of {DISPATCH_MODES}")
-        self.space = space
-        self.measurement_factory = measurement_factory
-        self.design = design
-        self.dataset = dataset
-        self.algorithms = algorithms
-        self.seed = seed
-        self.verbose = verbose
-        self.dispatch = dispatch
-        self.store = store
-        self.cache_key = cache_key
+        from .api import TuningSession, TuningSpec  # runner must not import api at module level
 
-    def _make_measurement(self, exp_seed: int) -> BaseMeasurement:
-        m = self.measurement_factory(exp_seed)
-        if self.store is not None:
-            m = DiskCachedMeasurement(
-                m, self.store, prefix=f"{self.cache_key}/seed={exp_seed}"
-            )
-        return m
-
-    # -- dataset-served paths (paper section VI.B) ---------------------------
-    def _rs_from_dataset(self, experiment: int, budget: int) -> TuningResult:
-        idx, vals = self.dataset.chunk(experiment, budget)
-        j = int(np.argmin(vals))
-        return TuningResult(
-            algo="rs",
-            best_config=self.space.decode(idx[j]),
-            best_value=float(vals[j]),
-            history_values=list(vals),
-            history_configs=[],
-            n_samples=budget,
+        spec = TuningSpec(
+            kernel=cache_key or "objective",
+            searcher=algorithms[0],
+            algorithms=tuple(algorithms),
+            design=design,
+            seed=seed,
+            dispatch=dispatch,
+            cache_key=cache_key or "objective",
+        )
+        self.session = TuningSession(
+            spec,
+            space=space,
+            measurement_factory=measurement_factory,
+            dataset=dataset,
+            store=store,
+            verbose=verbose,
         )
 
-    def _rf_cell_batched(
-        self, sample_size: int, n_exp: int, rf_pool: int = 2048
-    ) -> list[TuningResult]:
-        """All RF experiments of one sample-size cell, fit in ONE vectorized
-        histogram-forest pass (see surrogates/forest_batched.py).  Semantics
-        per experiment match the paper: train on a disjoint S-10 dataset
-        chunk, measure the model's top-10 predictions over a candidate pool,
-        keep the best prediction."""
-        top_k = min(10, max(1, sample_size // 2))
-        n_train = sample_size - top_k
-        chunks = [self.dataset.chunk(e, n_train) for e in range(n_exp)]
-        Xc = np.stack([c[0] for c in chunks])
-        yc = np.stack([c[1] for c in chunks])
-        forest = BatchedForest(
-            self.space.cardinalities, n_estimators=100, seed=self.seed
-        )
-        forest.fit(Xc, yc)
-        pool_rng = np.random.default_rng(self.seed + 7)
-        pool = self.space.sample_indices(pool_rng, rf_pool)
-        preds = forest.predict(pool)                    # (E, P)
-        results = []
-        for e in range(n_exp):
-            exp_seed = stable_seed(self.seed, "rf", sample_size, e)
-            measurement = self._make_measurement(exp_seed)
-            best = np.argsort(preds[e], kind="stable")[:top_k]
-            run_vals = measurement.measure_batch(self.space.decode_batch(pool[best]))
-            j = int(np.argmin(run_vals))
-            results.append(
-                TuningResult(
-                    algo="rf",
-                    best_config=self.space.decode(pool[best][j]),
-                    best_value=float(run_vals[j]),
-                    history_values=list(yc[e]) + list(run_vals),
-                    history_configs=[],
-                    n_samples=sample_size,
-                )
-            )
-        return results
-
-    # -- main loop ------------------------------------------------------------
     def run(self) -> MatrixResults:
-        results = MatrixResults()
-        for algo in self.algorithms:
-            for sample_size, n_exp in self.design.rows():
-                finals = np.empty(n_exp)
-                search_best = np.empty(n_exp)
-                n_used = np.empty(n_exp, dtype=np.int64)
-                rf_batch = (
-                    self._rf_cell_batched(sample_size, n_exp)
-                    if (self.dataset is not None and algo == "rf")
-                    else None
-                )
-                for e in range(n_exp):
-                    exp_seed = stable_seed(self.seed, algo, sample_size, e)
-                    measurement = self._make_measurement(exp_seed)
-                    if rf_batch is not None:
-                        tr = rf_batch[e]
-                    elif self.dataset is not None and algo == "rs":
-                        tr = self._rs_from_dataset(e, sample_size)
-                    else:
-                        searcher = make_searcher(algo, self.space, seed=exp_seed)
-                        tr = searcher.run(
-                            measurement, sample_size, dispatch=self.dispatch
-                        )
-                    finals[e] = measurement.measure_final(
-                        tr.best_config, self.design.final_repeats
-                    )
-                    search_best[e] = tr.best_value
-                    n_used[e] = tr.n_samples
-                results.add(
-                    CellResult(
-                        algo=algo,
-                        sample_size=sample_size,
-                        final_values=finals,
-                        search_best_values=search_best,
-                        n_samples_used=n_used,
-                    )
-                )
-                if self.verbose:
-                    print(
-                        f"[runner] {algo:7s} S={sample_size:4d} E={n_exp:4d} "
-                        f"median={np.median(finals):.6g} best={finals.min():.6g}"
-                    )
-        if self.store is not None:
-            self.store.save()
-        return results
+        return self.session.run_matrix()

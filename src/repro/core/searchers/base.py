@@ -48,6 +48,11 @@ class TuningResult:
 
     def trajectory(self) -> np.ndarray:
         """Best-so-far curve over the sample history."""
+        if not self.history_values:
+            raise ValueError(
+                "TuningResult has an empty sample history — no trajectory. "
+                "Was the search run (finish() before any tell())?"
+            )
         return np.minimum.accumulate(np.asarray(self.history_values, dtype=np.float64))
 
 
@@ -131,9 +136,16 @@ class Searcher(ABC):
         return s.done and not s.queue and not s.outstanding
 
     def finish(self) -> TuningResult:
-        """End the session and return the (budget-audited) result."""
+        """End the session and return the (budget-audited) result.
+
+        The pure ask/tell path never re-measures the winner, so
+        ``final_value`` is always ``None`` here; drivers that apply the
+        paper's 10x final re-measurement (``repro.tune``, the matrix
+        session) fill it afterwards.
+        """
         s = self._require_session()
         result = s.result
+        result.final_value = None
         result.n_samples = len(result.history_values)
         if result.n_samples > s.budget:
             raise RuntimeError(
@@ -148,7 +160,14 @@ class Searcher(ABC):
     ) -> TuningResult:
         """Drive a full search: ``dispatch="batch"`` routes each proposal
         batch through ``measurement.measure_batch`` (the hot path);
-        ``dispatch="one"`` measures sequentially (identical history)."""
+        ``dispatch="one"`` measures sequentially (identical history).
+
+        .. deprecated::
+            ``run`` is kept as a thin shim over the engine loop; new code
+            should go through the declarative facade —
+            ``repro.tune(TuningSpec(...))`` — which owns measurement
+            construction, caching, and the final re-measurement.
+        """
         from ..engine import drive   # local import: engine depends on this module
 
         return drive(self, measurement, budget, dispatch=dispatch)

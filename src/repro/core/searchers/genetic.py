@@ -13,13 +13,21 @@ Each generation is proposed as ONE batch through the ask/tell engine.
 Re-visited chromosomes consume no extra budget (their previous observation
 is reused), matching tuners that memoize; the engine trims the final batch
 so the search stops precisely at the sample budget.
+
+Late in a run the population converges and most offspring are revisits, so
+the post-dedup proposal batches shrink (~3x smaller than the population on
+the paper space).  With ``refill=True`` (default) the GA speculatively
+breeds extra offspring until the batch holds a full population's worth of
+*unseen* chromosomes (bounded attempts — a fully converged population stops
+early), keeping batched dispatch efficient without changing the budget
+accounting.  The post-evaluation population is truncated back to
+``pop_size`` best, so selection pressure is unchanged.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from ..space import Config
 from .base import ProposalGen, Searcher, TuningResult, register
 
 
@@ -28,10 +36,18 @@ class GeneticAlgorithm(Searcher):
     name = "ga"
     uses_constraints = True
 
-    def __init__(self, space, seed: int = 0, pop_size: int = 20, p_mut: float = 0.1):
+    def __init__(
+        self,
+        space,
+        seed: int = 0,
+        pop_size: int = 20,
+        p_mut: float = 0.1,
+        refill: bool = True,
+    ):
         super().__init__(space, seed)
         self.pop_size = pop_size
         self.p_mut = p_mut
+        self.refill = refill
 
     def _crossover(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
         """Half the variables from A, the other half from B (paper III.B.2)."""
@@ -68,9 +84,19 @@ class GeneticAlgorithm(Searcher):
             order = np.argsort(fitness)
             n_keep = max(2, len(population) // 2)
             survivors = population[order[:n_keep]]
+            target = pop_n - n_keep
             children: list = []
+            fresh_keys: set = set()
             attempts = 0
-            while len(children) < pop_n - n_keep and attempts < 200:
+            # base quota: `target` offspring, revisits included.  refill:
+            # keep breeding speculative extras until `target` of them are
+            # actually UNSEEN (a full post-dedup batch), bounded so a
+            # converged population can't spin forever.
+            max_attempts = 200 if not self.refill else max(200, 40 * target)
+            while attempts < max_attempts and (
+                len(children) < target
+                or (self.refill and len(fresh_keys) < target)
+            ):
                 attempts += 1
                 i, j = self.rng.choice(n_keep, size=2, replace=False)
                 child = self._crossover(survivors[i], survivors[j])
@@ -78,9 +104,17 @@ class GeneticAlgorithm(Searcher):
                 if not self.space.is_valid(self.space.decode(child)):
                     continue
                 children.append(child)
+                key = tuple(int(v) for v in child)
+                if key not in seen:
+                    fresh_keys.add(key)
             if not children:
                 break
             child_idx = np.array(children)
             child_fit = yield from self._evaluate(child_idx, seen)
             population = np.concatenate([survivors, child_idx])
             fitness = np.concatenate([fitness[order[:n_keep]], child_fit])
+            if len(population) > pop_n:
+                # speculative extras joined the generation; truncate back to
+                # the configured population size (best-first, stable)
+                sel = np.argsort(fitness, kind="stable")[:pop_n]
+                population, fitness = population[sel], fitness[sel]

@@ -15,7 +15,7 @@ mutation, Parzen estimators and tree splits are uniform across param types.
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Iterator, Sequence
 
 import numpy as np
@@ -211,6 +211,15 @@ class SearchSpace:
         return f"SearchSpace({ps}, |S|={self.cardinality}, constrained={self.constraint is not None})"
 
 
+def _paper_wg256(cfg: Config) -> bool:
+    """The paper's workgroup constraint: prod(w) <= 256 threads."""
+    return cfg["w_x"] * cfg["w_y"] * cfg["w_z"] <= 256
+
+
+#: stable id used by TuningSpec serialization (see repro.core.api)
+_paper_wg256.constraint_id = "paper_wg256"
+
+
 def paper_space(constrained: bool = True) -> SearchSpace:
     """The paper's 6-parameter space, TPU-adapted (DESIGN.md section 2.1).
 
@@ -231,8 +240,4 @@ def paper_space(constrained: bool = True) -> SearchSpace:
         Param.int_range("w_y", 1, 8),
         Param.int_range("w_z", 1, 8),
     ]
-    fn = None
-    if constrained:
-        def fn(cfg: Config) -> bool:
-            return cfg["w_x"] * cfg["w_y"] * cfg["w_z"] <= 256
-    return SearchSpace(params, constraint=fn)
+    return SearchSpace(params, constraint=_paper_wg256 if constrained else None)

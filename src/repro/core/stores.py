@@ -1,0 +1,102 @@
+"""Measurement store backends: persistent ``str -> float`` mappings.
+
+The JSON :class:`~repro.core.engine.MeasurementStore` (the default) rewrites
+its whole file per flush — fine at the scaled designs' ~10^5 entries, but the
+paper-exact ~3M-sample design needs incremental writes.  The sqlite backend
+here keeps the same duck-typed interface (``get`` / ``put`` / ``save`` /
+``items`` / ``update`` / ``__len__``) over a single-table database with
+batched commits, so :class:`~repro.core.engine.DiskCachedMeasurement` and the
+sharded matrix driver work unchanged against either.
+
+Select a backend by name through :func:`make_store` (``TuningSpec.store``
+routes here): ``make_store("sqlite", path)`` / ``make_store("json", path)``.
+"""
+
+from __future__ import annotations
+
+import os
+import sqlite3
+from typing import Iterable, Iterator
+
+from .engine import MeasurementStore
+
+
+class SqliteMeasurementStore:
+    """Sqlite-backed measurement store (same interface as the JSON store).
+
+    Writes accumulate in the sqlite connection and are committed every
+    ``autosave_every`` puts (0 disables autocommit batching; call
+    :meth:`save`).  ``path=None`` gives an in-memory database — useful for
+    tests and for shard workers that return their entries to the parent.
+    Unlike the JSON store, entries hit the file incrementally: a 3M-entry
+    run never rewrites the full history per flush.
+    """
+
+    def __init__(self, path: str | None, autosave_every: int = 4096):
+        self.path = path
+        self.autosave_every = autosave_every
+        self._dirty = 0
+        if path is not None:
+            d = os.path.dirname(path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+        self._conn = sqlite3.connect(path if path is not None else ":memory:")
+        self._conn.execute(
+            "CREATE TABLE IF NOT EXISTS measurements "
+            "(key TEXT PRIMARY KEY, value REAL NOT NULL)"
+        )
+        self._conn.commit()
+
+    def __len__(self) -> int:
+        (n,) = self._conn.execute("SELECT COUNT(*) FROM measurements").fetchone()
+        return int(n)
+
+    def get(self, key: str) -> float | None:
+        row = self._conn.execute(
+            "SELECT value FROM measurements WHERE key = ?", (key,)
+        ).fetchone()
+        return None if row is None else float(row[0])
+
+    def put(self, key: str, value: float) -> None:
+        self._conn.execute(
+            "INSERT OR REPLACE INTO measurements (key, value) VALUES (?, ?)",
+            (key, float(value)),
+        )
+        self._dirty += 1
+        if self.autosave_every and self._dirty >= self.autosave_every:
+            self.save()
+
+    def save(self) -> None:
+        self._conn.commit()
+        self._dirty = 0
+
+    def items(self) -> Iterator[tuple[str, float]]:
+        for key, value in self._conn.execute(
+            "SELECT key, value FROM measurements"
+        ):
+            yield key, float(value)
+
+    def update(self, entries: Iterable[tuple[str, float]]) -> None:
+        self._conn.executemany(
+            "INSERT OR REPLACE INTO measurements (key, value) VALUES (?, ?)",
+            ((k, float(v)) for k, v in entries),
+        )
+        self.save()
+
+    def close(self) -> None:
+        self._conn.commit()
+        self._conn.close()
+
+
+#: store-kind registry, mirroring SEARCHERS / BACKENDS.
+STORES: dict[str, type] = {
+    "json": MeasurementStore,
+    "sqlite": SqliteMeasurementStore,
+}
+
+
+def make_store(kind: str, path: str | None = None, **kwargs):
+    """Resolve a measurement-store backend by name."""
+    if kind not in STORES:
+        raise KeyError(f"unknown store kind {kind!r}; have {sorted(STORES)}")
+    return STORES[kind](path, **kwargs)

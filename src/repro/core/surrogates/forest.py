@@ -12,7 +12,7 @@ level-by-level traversal (no Python recursion at predict time).
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

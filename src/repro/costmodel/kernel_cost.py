@@ -239,7 +239,12 @@ def executable_space(w: KernelWorkload, chip: ChipModel) -> SearchSpace:
         Param.int_range("w_y", 1, 8),
         Param.int_range("w_z", 1, 8),
     ]
-    return SearchSpace(params, constraint=lambda cfg: is_executable(w, chip, cfg))
+    def fn(cfg: Config) -> bool:
+        return is_executable(w, chip, cfg)
+
+    # stable id so TuningSpec serialization can rebuild this space by name
+    fn.constraint_id = f"vmem:{w.name}:{chip.name}"
+    return SearchSpace(params, constraint=fn)
 
 
 def true_optimum(w: KernelWorkload, chip: ChipModel) -> tuple[Config, float]:

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs.base import ArchConfig, ShapeCfg
+from ..configs.base import ArchConfig
 
 
 @dataclass(frozen=True)

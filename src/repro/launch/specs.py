@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig, ShapeCfg
-from ..models import abstract_params, build_model
+from ..models import abstract_params
 from ..models.layers import COMPUTE_DTYPE
 
 

@@ -8,7 +8,6 @@ bf16 (cast at the edges); reductions (softmax, norms) run in fp32.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -25,7 +25,6 @@ Logical axis names used across the zoo:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

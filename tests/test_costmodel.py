@@ -7,7 +7,6 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import paper_space
 from repro.costmodel import (
     CHIPS,
     FAILURE_RUNTIME,

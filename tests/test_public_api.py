@@ -1,0 +1,438 @@
+"""The public ``repro.tune`` facade: spec serialization, the backend/store
+registries, the sharded session driver, and the deprecation shims."""
+
+import os
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core import (
+    BACKENDS,
+    CachedMeasurement,
+    DiskCachedMeasurement,
+    ExperimentDesign,
+    MatrixRunner,
+    MeasurementStore,
+    RunRecord,
+    SqliteMeasurementStore,
+    TuningSession,
+    TuningSpec,
+    make_measurement,
+    make_searcher,
+    make_store,
+    paper_space,
+)
+from repro.costmodel import CHIPS, WORKLOADS, CostModelMeasurement, executable_space
+
+SMOKE = dict(kernel="harris", backend_kwargs={"chip": "v5e"})
+
+
+# ------------------------------------------------------------ spec round-trip
+
+
+def test_spec_roundtrips_through_json_with_derived_space():
+    spec = TuningSpec(
+        **SMOKE,
+        searcher="ga",
+        searcher_kwargs={"pop_size": 10},
+        budget=50,
+        seed=3,
+        store="sqlite",
+        store_path="/tmp/x.sqlite",
+        dataset_size=400,
+    )
+    again = TuningSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.to_dict() == spec.to_dict()
+
+
+def test_spec_roundtrips_explicit_space_and_design():
+    spec = TuningSpec(
+        kernel="harris",
+        space=paper_space(),                       # named "paper_wg256" constraint
+        design=ExperimentDesign.smoke(),
+        algorithms=("rs", "ga"),
+    )
+    again = TuningSpec.from_json(spec.to_json())
+    assert again.to_dict() == spec.to_dict()
+    assert again.design == spec.design
+    cfg_bad = dict(t_x=1, t_y=1, t_z=1, w_x=8, w_y=8, w_z=8)
+    assert not again.space.is_valid(cfg_bad)       # constraint survived
+
+
+def test_spec_roundtrips_vmem_constraint_space():
+    w, chip = WORKLOADS["add"], CHIPS["v4"]
+    spec = TuningSpec(kernel="add", space=executable_space(w, chip), budget=10)
+    again = TuningSpec.from_json(spec.to_json())
+    rng = np.random.default_rng(0)
+    cfgs = paper_space().unconstrained().sample_batch(rng, 50)
+    assert [spec.space.is_valid(c) for c in cfgs] == [
+        again.space.is_valid(c) for c in cfgs
+    ]
+
+
+def test_spec_with_callable_backend_kwargs_is_not_serializable():
+    spec = TuningSpec(
+        kernel="k",
+        backend="timing",
+        backend_kwargs={"runner": lambda cfg: None},
+        space=paper_space(),
+        budget=5,
+    )
+    with pytest.raises(TypeError, match="not JSON-serializable"):
+        spec.to_json()
+
+
+def test_spec_validation_errors():
+    with pytest.raises(KeyError, match="unknown searcher"):
+        TuningSpec(kernel="k", searcher="nope")
+    with pytest.raises(KeyError, match="unknown backend"):
+        TuningSpec(kernel="k", backend="nope")
+    with pytest.raises(KeyError, match="unknown store"):
+        TuningSpec(kernel="k", store="nope")
+    with pytest.raises(KeyError, match="unknown algorithms"):
+        TuningSpec(kernel="k", algorithms=("rs", "nope"))
+    with pytest.raises(ValueError, match="dispatch"):
+        TuningSpec(kernel="k", dispatch="sideways")
+    with pytest.raises(ValueError, match="budget"):
+        TuningSpec(kernel="k", budget=0)
+    with pytest.raises(ValueError, match="kernel"):
+        TuningSpec(kernel="")
+
+
+# ------------------------------------------------------------ BACKENDS registry
+
+
+def test_make_measurement_resolves_costmodel():
+    m = make_measurement("costmodel", kernel="harris", chip="v5e", seed=4)
+    assert isinstance(m, CostModelMeasurement)
+    assert m.seed == 4
+    with pytest.raises(KeyError, match="unknown backend"):
+        make_measurement("warp_drive")
+    with pytest.raises(KeyError, match="unknown kernel"):
+        make_measurement("costmodel", kernel="nope")
+    with pytest.raises(KeyError, match="unknown chip"):
+        make_measurement("costmodel", kernel="harris", chip="h100")
+
+
+def test_make_measurement_wraps_inner_backends(tmp_path):
+    m = make_measurement(
+        "cached", inner="callable", inner_kwargs={"fn": lambda cfg: 1.0}
+    )
+    assert isinstance(m, CachedMeasurement)
+    d = make_measurement(
+        "disk",
+        kernel="harris",
+        seed=2,
+        inner="costmodel",
+        inner_kwargs={"chip": "v4"},
+        store="sqlite",
+        store_path=str(tmp_path / "c.sqlite"),
+    )
+    assert isinstance(d, DiskCachedMeasurement)
+    assert d.prefix == "harris/seed=2"
+    with pytest.raises(TypeError, match="inner must be"):
+        make_measurement("cached", inner=42)
+
+
+def test_backend_default_space_matches_executable_space():
+    space = BACKENDS["costmodel"].default_space(kernel="add", chip="v3")
+    ref = executable_space(WORKLOADS["add"], CHIPS["v3"])
+    rng = np.random.default_rng(1)
+    np.testing.assert_array_equal(
+        space.sample_indices(rng, 20),
+        ref.sample_indices(np.random.default_rng(1), 20),
+    )
+
+
+# ------------------------------------------------------------ stores
+
+
+def test_sqlite_store_roundtrip_and_reload(tmp_path):
+    path = str(tmp_path / "m.sqlite")
+    s = make_store("sqlite", path)
+    assert isinstance(s, SqliteMeasurementStore)
+    s.put("a|x=1", 0.5)
+    s.put("a|x=2", 0.25)
+    s.save()
+    s.close()
+    s2 = make_store("sqlite", path)
+    assert len(s2) == 2
+    assert s2.get("a|x=1") == 0.5
+    assert s2.get("missing") is None
+    assert dict(s2.items())["a|x=2"] == 0.25
+    s2.update([("b|y=1", 1.5)])
+    assert len(s2) == 3
+    with pytest.raises(KeyError, match="unknown store"):
+        make_store("parquet", path)
+
+
+def test_sqlite_store_behind_disk_cache_serves_repeats(tmp_path):
+    path = str(tmp_path / "m.sqlite")
+    w, chip = WORKLOADS["add"], CHIPS["v5e"]
+    space = executable_space(w, chip)
+
+    def run(store):
+        inner = CostModelMeasurement(w, chip, seed=6)
+        m = DiskCachedMeasurement(inner, store, prefix="add/v5e/seed=6")
+        r = make_searcher("ga", space, seed=2).run(m, 30)
+        return r, m
+
+    r1, m1 = run(make_store("sqlite", path))
+    m1._store.save()
+    assert m1.n_misses == 30
+    r2, m2 = run(make_store("sqlite", path))
+    assert m2.n_misses == 0
+    assert r1.history_values == r2.history_values
+
+
+def test_spec_store_sqlite_is_used_by_session(tmp_path):
+    path = str(tmp_path / "cell.sqlite")
+    spec = TuningSpec(**SMOKE, searcher="rs", budget=20, store="sqlite",
+                      store_path=path)
+    repro.tune(spec)
+    assert len(make_store("sqlite", path)) > 0
+
+
+# ------------------------------------------------------------ tune() facade
+
+
+def test_tune_matches_manual_drive_bit_identically():
+    spec = TuningSpec(**SMOKE, searcher="ga", budget=30, seed=7)
+    r1 = repro.tune(spec)
+    w, chip = WORKLOADS["harris"], CHIPS["v5e"]
+    m = CostModelMeasurement(w, chip, seed=7)
+    r2 = make_searcher("ga", executable_space(w, chip), seed=7).run(m, 30)
+    assert r1.history_values == r2.history_values
+    assert r1.best_config == r2.best_config
+    assert r1.n_samples == 30
+    # the facade applies the paper's final re-measurement; ask/tell does not
+    assert r1.final_value is not None
+    assert r2.final_value is None
+
+
+def test_tune_writes_run_record(tmp_path):
+    path = str(tmp_path / "rec.json")
+    spec = TuningSpec(**SMOKE, searcher="rs", budget=10, seed=1)
+    r = repro.tune(spec, record_path=path)
+    rec = RunRecord.load(path)
+    assert rec.version == 1
+    assert rec.kind == "tune"
+    assert rec.spec["kernel"] == "harris"
+    assert rec.result["final_value"] == r.final_value
+    assert rec.result["n_samples"] == 10
+    assert "created_at" in rec.provenance and "numpy" in rec.provenance
+
+
+def test_tune_requires_budget_and_matrix_requires_design():
+    with pytest.raises(ValueError, match="budget"):
+        repro.tune(TuningSpec(**SMOKE))
+    with pytest.raises(ValueError, match="design"):
+        repro.tune_matrix(TuningSpec(**SMOKE, budget=5))
+
+
+def test_session_rejects_spaceless_backend():
+    with pytest.raises(ValueError, match="no default space"):
+        TuningSession(
+            TuningSpec(kernel="k", backend="callable",
+                       backend_kwargs={"fn": lambda c: 1.0}, budget=5)
+        )
+
+
+# ------------------------------------------------------------ matrix + shards
+
+
+MATRIX_SPEC = TuningSpec(
+    **SMOKE,
+    algorithms=("rs", "ga", "bo_tpe"),
+    design=ExperimentDesign(sample_sizes=(25,), n_experiments=(3,), final_repeats=3),
+    seed=11,
+    dataset_size=200,
+)
+
+
+def test_sharded_matrix_is_bit_identical_to_single_process(tmp_path):
+    spec = MATRIX_SPEC.replace(
+        store="json", store_path=str(tmp_path / "cache.json")
+    )
+    single = repro.tune_matrix(spec)
+    sharded = repro.tune_matrix(spec, shards=2)
+    assert set(single.cells) == set(sharded.cells)
+    for key in single.cells:
+        np.testing.assert_array_equal(
+            single.cells[key].final_values, sharded.cells[key].final_values
+        )
+        np.testing.assert_array_equal(
+            single.cells[key].search_best_values,
+            sharded.cells[key].search_best_values,
+        )
+        np.testing.assert_array_equal(
+            single.cells[key].n_samples_used, sharded.cells[key].n_samples_used
+        )
+    # shard stores were merged into the main store and cleaned up
+    assert len(MeasurementStore(str(tmp_path / "cache.json"))) > 0
+    assert not [f for f in os.listdir(tmp_path) if ".shard" in f]
+
+
+def test_tune_matrix_out_dir_writes_npz_and_record(tmp_path):
+    out = str(tmp_path / "out")
+    results = repro.tune_matrix(
+        MATRIX_SPEC.replace(cache_key="harris/v5e"), out_dir=out
+    )
+    assert os.path.exists(os.path.join(out, "harris_v5e.npz"))
+    rec = RunRecord.load(os.path.join(out, "harris_v5e.json"))
+    assert rec.kind == "tune_matrix"
+    assert rec.result["best_observed"] == pytest.approx(results.optimum)
+    assert rec.result["true_optimum"] <= rec.result["best_observed"]
+    assert rec.result["dataset_best"] > 0
+    assert {c["algo"] for c in rec.result["cells"]} == {"rs", "ga", "bo_tpe"}
+    # the figure layer reads the record transparently
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.figures import load_all
+
+    res = load_all(out)
+    _, meta = res[("harris", "v5e")]
+    assert meta["optimum"] == rec.result["true_optimum"]
+
+
+def test_searcher_kwargs_apply_only_to_named_searcher():
+    # GA kwargs must not crash SA cells sharing the matrix axis
+    spec = TuningSpec(
+        **SMOKE,
+        searcher="ga",
+        searcher_kwargs={"pop_size": 8},
+        algorithms=("ga", "sa"),
+        design=ExperimentDesign(sample_sizes=(25,), n_experiments=(2,), final_repeats=3),
+    )
+    results = repro.tune_matrix(spec)
+    assert set(results.cells) == {("ga", 25), ("sa", 25)}
+
+
+def test_sharded_record_keeps_dataset_best_without_cache_file(tmp_path):
+    # no dataset_cache: the parent generates once, ships it to workers, and
+    # the record still carries dataset_best
+    out = str(tmp_path / "out")
+    spec = MATRIX_SPEC.replace(dataset_cache=None)
+    repro.tune_matrix(spec, shards=2, out_dir=out)
+    rec = RunRecord.load(os.path.join(out, "harris_v5e.json"))
+    assert rec.result["dataset_best"] > 0
+
+
+def test_sharded_run_rejects_unserializable_backend():
+    spec = TuningSpec(
+        kernel="k",
+        backend="timing",
+        backend_kwargs={"runner": lambda cfg: None},
+        space=paper_space(),
+        algorithms=("rs", "ga"),
+        design=ExperimentDesign(sample_sizes=(25,), n_experiments=(2,)),
+    )
+    with pytest.raises(RuntimeError, match="cannot be rebuilt in shard workers"):
+        TuningSession(spec).run_matrix(shards=2)
+
+
+def test_sharded_run_rejects_in_process_overrides():
+    session = TuningSession(
+        MATRIX_SPEC, measurement_factory=lambda s: make_measurement(
+            "costmodel", kernel="harris", seed=s
+        )
+    )
+    with pytest.raises(RuntimeError, match="serialized spec"):
+        session.run_matrix(shards=2)
+
+
+# ------------------------------------------------------------ deprecation shims
+
+
+def test_matrix_runner_shim_warns_and_delegates():
+    w, chip = WORKLOADS["harris"], CHIPS["v5e"]
+    space = executable_space(w, chip)
+    design = ExperimentDesign(sample_sizes=(25,), n_experiments=(2,), final_repeats=3)
+    with pytest.warns(DeprecationWarning, match="tune_matrix"):
+        runner = MatrixRunner(
+            space,
+            lambda s: CostModelMeasurement(w, chip, seed=s),
+            design,
+            algorithms=("rs", "ga"),
+            seed=11,
+        )
+    shim = runner.run()
+    facade = repro.tune_matrix(
+        TuningSpec(**SMOKE, algorithms=("rs", "ga"), design=design, seed=11)
+    )
+    assert set(shim.cells) == set(facade.cells)
+    for key in shim.cells:
+        np.testing.assert_array_equal(
+            shim.cells[key].final_values, facade.cells[key].final_values
+        )
+
+
+def test_searcher_run_shim_matches_session_loop():
+    w, chip = WORKLOADS["harris"], CHIPS["v5e"]
+    r_shim = make_searcher("rs", executable_space(w, chip), seed=5).run(
+        CostModelMeasurement(w, chip, seed=5), 25
+    )
+    r_api = repro.tune(TuningSpec(**SMOKE, searcher="rs", budget=25, seed=5))
+    assert r_shim.history_values == r_api.history_values
+
+
+# ------------------------------------------------------------ result semantics
+
+
+def test_trajectory_raises_clearly_on_empty_history():
+    from repro.core import TuningResult
+
+    with pytest.raises(ValueError, match="empty sample history"):
+        TuningResult(algo="rs", best_config={}, best_value=np.inf).trajectory()
+    r = TuningResult(algo="rs", best_config={}, best_value=1.0,
+                     history_values=[3.0, 2.0, 2.5])
+    np.testing.assert_array_equal(r.trajectory(), [3.0, 2.0, 2.0])
+
+
+def test_finish_leaves_final_value_none_in_ask_tell_path():
+    space = paper_space()
+    s = make_searcher("rs", space, seed=0)
+    s.start(5)
+    cfgs = s.ask()
+    s.tell(cfgs, np.ones(len(cfgs)))
+    while not s.done:
+        cfgs = s.ask()
+        if not cfgs:
+            break
+        s.tell(cfgs, np.ones(len(cfgs)))
+    r = s.finish()
+    assert r.final_value is None
+    assert r.n_samples == 5
+
+
+# ------------------------------------------------------------ GA batch refill
+
+
+def ga_batch_sizes(refill: bool, budget: int = 200):
+    w, chip = WORKLOADS["harris"], CHIPS["v5e"]
+    m = CostModelMeasurement(w, chip, seed=0)
+    s = make_searcher("ga", paper_space(), seed=0, refill=refill)
+    s.start(budget)
+    sizes = []
+    while not s.done:
+        cfgs = s.ask()
+        if not cfgs:
+            break
+        sizes.append(len(cfgs))
+        s.tell(cfgs, m.measure_batch(cfgs))
+    r = s.finish()
+    assert r.n_samples == budget
+    return sizes
+
+
+def test_ga_refill_keeps_late_batches_full():
+    base = ga_batch_sizes(refill=False)
+    refilled = ga_batch_sizes(refill=True)
+    # same budget in far fewer, fuller dispatch batches
+    assert len(refilled) < len(base)
+    # after init (pop 20) each generation proposes 10 fresh offspring; with
+    # refill every non-trimmed batch stays full
+    assert all(b == 10 for b in refilled[1:-1])
+    assert min(base[1:-1]) < 10               # the shrinkage refill fixes

@@ -2,7 +2,6 @@
 
 import jax
 import numpy as np
-import pytest
 from jax.sharding import Mesh, PartitionSpec
 
 from repro.launch.hlo_analysis import (
@@ -138,7 +137,6 @@ def test_dot_flops_loop_corrected():
 def test_build_step_single_device_mesh():
     """The dry-run machinery itself, on a 1x1 mesh with a reduced arch —
     exercises shardings, lowering and the analysis pipeline in-process."""
-    from dataclasses import replace
 
     from repro.configs import REGISTRY
     from repro.configs.base import ShapeCfg
