@@ -3,10 +3,16 @@
 # themselves when absent).
 PYTHON ?= python
 
-.PHONY: test test-fast bench lint install-dev
+.PHONY: test test-fast bench lint install-dev smoke-pallas
 
 test:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q
+
+# tier-2: the real-measurement path end-to-end — tunes the add kernel with a
+# tiny budget through BACKENDS["pallas"] (interpret mode on CPU); exits
+# nonzero if the tuned config did not actually run
+smoke-pallas:
+	PYTHONPATH=src $(PYTHON) examples/tune_kernel_interpret.py
 
 lint:
 	ruff check src tests benchmarks examples

@@ -32,6 +32,11 @@ def _normalize_meta(meta: dict) -> dict:
     flat["optimum"] = result.get("true_optimum", result.get("best_observed"))
     flat["spec"] = meta.get("spec", {})
     flat["provenance"] = meta.get("provenance", {})
+    # which measurement produced these numbers: "costmodel" (analytical,
+    # has a true optimum) vs "pallas" (real execution — pct-of-optimum is
+    # relative to best observed).  backend_provenance carries the detail
+    # (interpret flag, device kind, repeats, warmup) when recorded.
+    flat["backend"] = flat["spec"].get("backend", "costmodel")
     return flat
 
 

@@ -39,13 +39,22 @@ def combo_path(out_dir: str, bench: str, chip: str) -> str:
 def combo_spec(bench: str, chip_name: str, design: ExperimentDesign,
                out_dir: str, algorithms=ALGOS, seed: int = 0,
                cache: bool = True, dispatch: str = "batch",
-               store: str = "json") -> TuningSpec:
-    """The declarative spec for one (benchmark, chip) combo."""
+               store: str = "json", backend: str = "costmodel") -> TuningSpec:
+    """The declarative spec for one (benchmark, chip) combo.
+
+    ``backend="pallas"`` swaps the analytical model for real kernel
+    execution (interpret mode on CPU, Mosaic on TPU); the chip axis
+    collapses to the pseudo-target ``"pallas"`` (the hardware IS the chip)
+    and the 20k pre-generated dataset is skipped — generating it through
+    real timings would dwarf the matrix itself.  RS/RF fall back to their
+    searcher implementations.
+    """
     store_ext = "sqlite" if store == "sqlite" else "json"
+    pallas = backend == "pallas"
     return TuningSpec(
         kernel=bench,
-        backend="costmodel",
-        backend_kwargs={"chip": chip_name},
+        backend=backend,
+        backend_kwargs={} if pallas else {"chip": chip_name},
         algorithms=tuple(algorithms),
         design=design,
         seed=seed,
@@ -61,7 +70,7 @@ def combo_spec(bench: str, chip_name: str, design: ExperimentDesign,
         ),
         # the 20k pre-generated dataset serving the non-SMBO methods
         # (seeds in the filename: changing either invalidates the cache)
-        dataset_size=20000,
+        dataset_size=None if pallas else 20000,
         dataset_seed=DATASET_SEED,
         dataset_gen_seed=GEN_SEED,
         dataset_cache=(
@@ -69,7 +78,7 @@ def combo_spec(bench: str, chip_name: str, design: ExperimentDesign,
                 out_dir,
                 f"{bench}_{chip_name}_dataset_s{DATASET_SEED}g{GEN_SEED}.npz",
             )
-            if cache
+            if cache and not pallas
             else None
         ),
     )
@@ -78,9 +87,10 @@ def combo_spec(bench: str, chip_name: str, design: ExperimentDesign,
 def run_combo(bench: str, chip_name: str, design: ExperimentDesign, out_dir: str,
               algorithms=ALGOS, seed: int = 0, verbose: bool = True,
               cache: bool = True, dispatch: str = "batch", shards: int = 1,
-              store: str = "json") -> None:
+              store: str = "json", backend: str = "costmodel") -> None:
     spec = combo_spec(bench, chip_name, design, out_dir, algorithms=algorithms,
-                      seed=seed, cache=cache, dispatch=dispatch, store=store)
+                      seed=seed, cache=cache, dispatch=dispatch, store=store,
+                      backend=backend)
     t0 = time.time()
     repro.tune_matrix(spec, shards=shards, out_dir=out_dir, verbose=verbose)
     record = repro.RunRecord.load(
@@ -88,8 +98,12 @@ def run_combo(bench: str, chip_name: str, design: ExperimentDesign, out_dir: str
     )
     opt = record.result.get("true_optimum")
     opt_cfg = record.result.get("true_optimum_config")
+    if opt is not None:
+        detail = f"optimum {opt*1e3:.3f} ms @ {opt_cfg}"
+    else:  # real-measurement backends have no analytic optimum
+        detail = f"best observed {record.result['best_observed']*1e3:.3f} ms"
     print(f"[matrix] {bench} x {chip_name} done in {time.time() - t0:.0f}s "
-          f"(optimum {opt*1e3:.3f} ms @ {opt_cfg})")
+          f"({detail})")
 
 
 def main() -> None:
@@ -101,6 +115,11 @@ def main() -> None:
                     help="worker processes per combo (cells fan out)")
     ap.add_argument("--store", choices=("json", "sqlite"), default="json",
                     help="measurement-cache backend (sqlite for paper-exact runs)")
+    ap.add_argument("--backend", choices=("costmodel", "pallas"),
+                    default="costmodel",
+                    help="analytical model, or real pallas_call execution "
+                         "(interpret on CPU; use a scaled design — real "
+                         "timings are wall-clock-bound)")
     ap.add_argument("--out", default=None)
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
@@ -110,20 +129,24 @@ def main() -> None:
         if args.design == "paper"
         else ExperimentDesign.scaled(budget=args.budget)
     )
-    out_dir = args.out or os.path.join(
-        "results", "paper_matrix" if args.design == "paper" else f"matrix_{args.budget}"
-    )
+    tag = "paper_matrix" if args.design == "paper" else f"matrix_{args.budget}"
+    if args.backend != "costmodel":
+        tag = f"{tag}_{args.backend}"
+    out_dir = args.out or os.path.join("results", tag)
     os.makedirs(out_dir, exist_ok=True)
 
+    # real measurement: the chip model axis collapses — the device is the chip
+    chips = CHIP_NAMES if args.backend == "costmodel" else ("pallas",)
     t0 = time.time()
     for bench in BENCHMARKS:
-        for chip_name in CHIP_NAMES:
+        for chip_name in chips:
             path = combo_path(out_dir, bench, chip_name)
             if os.path.exists(path) and not args.force:
                 print(f"[matrix] skip existing {path}")
                 continue
             run_combo(bench, chip_name, design, out_dir,
-                      shards=args.shards, store=args.store)
+                      shards=args.shards, store=args.store,
+                      backend=args.backend)
     print(f"[matrix] all combos done in {(time.time()-t0)/60:.1f} min -> {out_dir}")
 
 

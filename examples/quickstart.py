@@ -82,6 +82,16 @@ def main() -> None:
             f"p={cmp['mwu_p']:.4f} significant={cmp['significant']}"
         )
 
+    # same declarative API, REAL measurement: swap the backend name and the
+    # engine compiles and times the actual pl.pallas_call kernel (interpret
+    # mode on CPU, Mosaic on TPU) — see docs/pallas_backend.md
+    r = repro.tune(
+        SPEC.replace(backend="pallas",
+                     backend_kwargs={"repeats": 3}, budget=10, final_repeats=3)
+    )
+    print(f"\nreal-measurement harris (backend='pallas', interpret mode): "
+          f"{r.final_value*1e3:.2f} ms @ {r.best_config}")
+
 
 if __name__ == "__main__":
     main()

@@ -1,69 +1,52 @@
-"""Tune a REAL Pallas kernel by wall-clock measurement — via the facade.
+"""Tune a REAL Pallas kernel by measured wall-clock — `backend="pallas"`.
 
-Runs the actual ``pl.pallas_call`` add kernel in interpret mode on small
-images and lets the GA pick block geometry by measured time — the paper's
-loop with a real measurement function (DESIGN.md 2.2 backend 2).  The
-measurement chain is declared through the ``BACKENDS`` registry: a
-``"cached"`` backend (one measurement per distinct config, per the paper)
-wrapping a ``"timing"`` backend around the kernel runner.  Interpret mode
-timings reflect Python-level grid overhead rather than TPU behaviour, so
-this example is about exercising the full real-measurement path, not about
-the specific winner.
+Runs the actual ``pl.pallas_call`` add kernel (interpret mode on CPU; the
+same spec lowers to Mosaic on a real TPU) and lets the GA pick block
+geometry by measured time — the paper's loop with a real measurement
+function.  The backend is selected *by name* from the ``BACKENDS`` registry,
+so the whole run is described by a JSON-serializable spec: shard workers,
+resumed runs, and remote executors rebuild the identical problem from the
+spec alone (deterministic inputs, validity pre-screen, compile-once-per-
+geometry cache — see docs/pallas_backend.md).
 
-Specs whose backend kwargs hold live callables work in-process but cannot
-be serialized or sharded — name-only backends (``"costmodel"``) can.
+Interpret-mode timings reflect Python-level grid overhead rather than TPU
+behaviour, so this example is about exercising the full real-measurement
+path, not about the specific winner.  It doubles as the CI smoke for that
+path (``make smoke-pallas``).
 
     PYTHONPATH=src python examples/tune_kernel_interpret.py
 """
 
 import numpy as np
-import jax.numpy as jnp
 
 import repro
-from repro.core import Param, SearchSpace, TuningSpec
-from repro.kernels import add
+from repro.core import TuningSpec
 
-X, Y = 256, 512
+X, Y = 128, 256
 BUDGET = 12
 
 
 def main() -> None:
-    rng = np.random.default_rng(0)
-    a = jnp.asarray(rng.normal(size=(X, Y)), jnp.float32)
-    b = jnp.asarray(rng.normal(size=(X, Y)), jnp.float32)
-
-    # small space: interpret mode is slow, keep the sweep tight
-    space = SearchSpace(
-        [
-            Param.int_range("t_x", 1, 4),
-            Param.int_range("t_y", 1, 4),
-            Param.int_range("t_z", 1, 4),
-            Param.int_range("w_x", 1, 2),
-            Param.int_range("w_y", 1, 2),
-            Param.int_range("w_z", 1, 2),
-        ]
-    )
-
-    def run_kernel(cfg):
-        np.asarray(add(a, b, cfg))  # block until done
-
     spec = TuningSpec(
-        kernel="add_interpret",
+        kernel="add",
         searcher="ga",
-        backend="cached",
-        backend_kwargs={
-            "inner": "timing",
-            "inner_kwargs": {"runner": run_kernel, "warmup": 1},
-        },
-        space=space,
+        backend="pallas",
+        backend_kwargs={"x": X, "y": Y, "repeats": 3, "warmup": 1},
         budget=BUDGET,
         final_repeats=5,
         seed=0,
     )
+    # the whole run is data — this is what shard workers receive
+    print(f"spec: {spec.to_json()}\n")
+
     r = repro.tune(spec)
-    print(f"GA best config after {r.n_samples} real kernel timings: {r.best_config}")
+    print(f"GA best config after {r.n_samples} real kernel measurements: "
+          f"{r.best_config}")
     print(f"measured {r.best_value*1e3:.2f} ms per call (interpret mode)")
-    print(f"final config re-measured 5x (paper protocol): {r.final_value*1e3:.2f} ms")
+    print(f"final config re-measured 5x (paper protocol): "
+          f"{r.final_value*1e3:.2f} ms")
+    if not np.isfinite(r.final_value):
+        raise SystemExit("smoke failure: tuned config did not run")
 
 
 if __name__ == "__main__":

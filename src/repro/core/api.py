@@ -106,6 +106,17 @@ def _resolve_constraint(cid: str | None) -> Callable[[Config], bool] | None:
 
         fn.constraint_id = cid
         return fn
+    if cid.startswith("pallas_fit:"):
+        # pallas_fit:<kernel>:<x>:<y>:<vmem_limit>:<max_grid> — the real
+        # measurement backend's validity pre-screen as a named constraint
+        from ..pallas_bench import fit_constraint, make_workload
+
+        _, kernel, x, y, vmem_limit, max_grid = cid.split(":")
+        return fit_constraint(
+            make_workload(kernel, x=int(x), y=int(y)),
+            int(vmem_limit),
+            int(max_grid),
+        )
     raise KeyError(
         f"unknown constraint id {cid!r}; register it with "
         f"repro.core.api.register_constraint(name, fn)"
@@ -202,8 +213,26 @@ class TuningSpec:
         return self.algorithms if self.algorithms is not None else (self.searcher,)
 
     def default_cache_key(self) -> str:
-        chip = self.backend_kwargs.get("chip")
-        return f"{self.kernel}/{chip}" if chip else f"{self.kernel}/{self.backend}"
+        # the common costmodel case keeps its compact, store-compatible form
+        if set(self.backend_kwargs) == {"chip"}:
+            return f"{self.kernel}/{self.backend_kwargs['chip']}"
+        if self.backend_kwargs:
+            # backend kwargs change what a measurement MEANS (problem size,
+            # repeats, noise, validity limits...) — bake them into the
+            # namespace so a shared store never serves values from a
+            # different problem.  Non-scalar kwargs (live callables) have no
+            # stable repr; they collapse to a type token — set cache_key
+            # explicitly to separate two such specs sharing one store.
+            def stable(v):
+                return v if isinstance(v, (str, int, float, bool, type(None))) \
+                    else f"<{type(v).__name__}>"
+
+            kw = ",".join(
+                f"{k}={stable(self.backend_kwargs[k])}"
+                for k in sorted(self.backend_kwargs)
+            )
+            return f"{self.kernel}/{self.backend}/{kw}"
+        return f"{self.kernel}/{self.backend}"
 
     def replace(self, **changes) -> "TuningSpec":
         return replace(self, **changes)
@@ -440,18 +469,34 @@ class TuningSession:
             result.best_config, spec.final_repeats
         )
         self.save_store()
+        res = {
+            "best_config": result.best_config,
+            "best_value": result.best_value,
+            "final_value": result.final_value,
+            "n_samples": result.n_samples,
+        }
+        reason = measurement.reason_for(result.best_config)
+        if reason is not None:
+            res["invalid_reason"] = reason
+        repeats = measurement.repeats_for(result.best_config)
+        if repeats is not None:
+            # raw per-repeat seconds behind final_value's median
+            res["final_repeat_times"] = [float(v) for v in repeats]
         self.last_record = RunRecord(
             kind="tune",
             spec=self._spec_dict_or_repr(),
-            result={
-                "best_config": result.best_config,
-                "best_value": result.best_value,
-                "final_value": result.final_value,
-                "n_samples": result.n_samples,
-            },
+            result=res,
             provenance=_provenance(time.time() - t0),
+            extra=self._backend_extra(measurement),
         )
         return result
+
+    def _backend_extra(self, measurement: BaseMeasurement | None) -> dict:
+        """Backend provenance (interpret flag, device kind, repeats, warmup,
+        timer...) for the run record — how the numbers were produced, which
+        is what lets the figure layer tell costmodel runs from pallas runs."""
+        prov = measurement.provenance() if measurement is not None else {}
+        return {"backend_provenance": prov} if prov else {}
 
     # -- matrix runs ----------------------------------------------------------
     def cells(self) -> list[tuple[str, int, int]]:
@@ -496,7 +541,7 @@ class TuningSession:
         )
         for e in range(n_exp):
             exp_seed = stable_seed(spec.seed, algo, sample_size, e)
-            measurement = self._make_measurement(exp_seed)
+            measurement = self.measurement = self._make_measurement(exp_seed)
             if rf_batch is not None:
                 tr = rf_batch[e]
             elif dataset is not None and algo == "rs":
@@ -612,11 +657,23 @@ class TuningSession:
         )
         shards = min(shards, len(cells))
         parts = [cells[k::shards] for k in range(shards)]
+        # a warm parent store is shipped (by path) to every worker: shard
+        # stores start as copies, so previously-measured entries are served
+        # as hits — a second sharded run performs zero re-measurements and
+        # the merged store comes back bit-identical
+        base_store_path = (
+            self._store_path
+            if self.spec.store is not None
+            and self._store_path is not None
+            and os.path.exists(self._store_path)
+            else None
+        )
         payloads = [
             {
                 "spec": spec_dict,
                 "cells": parts[k],
                 "store_path": self._shard_store_path(k),
+                "base_store_path": base_store_path,
                 "dataset": dataset_payload,
             }
             for k in range(shards)
@@ -640,6 +697,8 @@ class TuningSession:
                 continue
             shard_store = make_store(self.spec.store, path)
             self.store.update(shard_store.items())
+            if hasattr(shard_store, "meta_items"):
+                self.store.update_meta(shard_store.meta_items())
             if hasattr(shard_store, "close"):
                 shard_store.close()
             os.remove(path)
@@ -693,7 +752,9 @@ class TuningSession:
             spec=self._spec_dict_or_repr(),
             result=result,
             provenance=_provenance(wall_s),
-            extra=dict(extra or {}),
+            # backend provenance from the last in-process cell measurement
+            # (sharded parents hold none — workers own the measurements)
+            extra={**self._backend_extra(self.measurement), **dict(extra or {})},
         )
 
 
@@ -703,6 +764,16 @@ def _shard_worker(payload: dict) -> list[CellResult]:
     sample dataset so workers never regenerate it)."""
     spec = TuningSpec.from_dict(payload["spec"])
     session = TuningSession(spec, store_path=payload["store_path"])
+    base_path = payload.get("base_store_path")
+    if base_path is not None and session.store is not None and os.path.exists(base_path):
+        # seed the shard store from the parent's warm store: hits are served
+        # without re-measuring (or recompiling, for the pallas backend)
+        base = make_store(spec.store, base_path)
+        session.store.update(base.items())
+        if hasattr(base, "meta_items"):
+            session.store.update_meta(base.meta_items())
+        if hasattr(base, "close"):
+            base.close()
     if payload.get("dataset") is not None:
         indices, values = payload["dataset"]
         session._dataset = SampleDataset(

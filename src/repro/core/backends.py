@@ -8,8 +8,13 @@ process.  Built-in backends:
 * ``"costmodel"`` — the analytical TPU cost model with counter-based noise
   (``kernel=..., chip=..., seed=..., noise=...``); also provides the default
   :class:`SearchSpace` (executable configs) and the noise-free true optimum.
+* ``"pallas"``    — REAL ``pl.pallas_call`` execution through
+  :mod:`repro.pallas_bench` (compile-once-per-geometry cache, warmup +
+  N-repeat fenced timing, validity pre-screen mapping failures to ``inf``
+  penalties); name-serializable, so specs using it shard cleanly.  Interpret
+  mode on CPU, Mosaic on TPU, selected automatically.
 * ``"timing"``    — wall-clock of a real callable (``runner=..., warmup=...``),
-  e.g. interpret-mode Pallas kernels.
+  for custom objectives the ``pallas`` backend doesn't cover.
 * ``"cached"``    — in-memory memoization of an ``inner`` backend (paper: a
   config is measured once during search).
 * ``"disk"``      — persistent memoization of an ``inner`` backend through a
@@ -108,6 +113,60 @@ def _costmodel_optimum(kernel: str = "harris", chip: str = "v5e", **_):
     return true_optimum(w, c)
 
 
+# ------------------------------------------------------------------ pallas
+
+
+def _make_pallas(
+    kernel: str = "add",
+    seed: int = 0,
+    *,
+    x: int | None = None,
+    y: int | None = None,
+    input_seed: int = 0,
+    repeats: int = 5,
+    warmup: int = 1,
+    vmem_limit: int | None = None,
+    max_grid: int | None = None,
+    validate: bool = True,
+) -> BaseMeasurement:
+    # lazy import: core must stay importable without jax/pallas_bench
+    from ..pallas_bench import (
+        DEFAULT_MAX_GRID,
+        DEFAULT_VMEM_LIMIT,
+        DEFAULT_X,
+        DEFAULT_Y,
+        PallasMeasurement,
+        make_workload,
+    )
+
+    workload = make_workload(
+        kernel,
+        x=x if x is not None else DEFAULT_X,
+        y=y if y is not None else DEFAULT_Y,
+        input_seed=input_seed,
+    )
+    return PallasMeasurement(
+        workload,
+        repeats=repeats,
+        warmup=warmup,
+        vmem_limit=vmem_limit if vmem_limit is not None else DEFAULT_VMEM_LIMIT,
+        max_grid=max_grid if max_grid is not None else DEFAULT_MAX_GRID,
+        validate=validate,
+    )
+
+
+def _pallas_space(kernel: str = "add", **kwargs) -> SearchSpace:
+    from ..pallas_bench import DEFAULT_MAX_GRID, DEFAULT_VMEM_LIMIT, DEFAULT_X, DEFAULT_Y, default_space
+
+    return default_space(
+        kernel,
+        x=kwargs.get("x") or DEFAULT_X,
+        y=kwargs.get("y") or DEFAULT_Y,
+        vmem_limit=kwargs.get("vmem_limit") or DEFAULT_VMEM_LIMIT,
+        max_grid=kwargs.get("max_grid") or DEFAULT_MAX_GRID,
+    )
+
+
 # --------------------------------------------------------------- wrappers
 
 
@@ -179,6 +238,9 @@ register_backend(
         default_space=_costmodel_space,
         true_optimum=_costmodel_optimum,
     )
+)
+register_backend(
+    Backend(name="pallas", make=_make_pallas, default_space=_pallas_space)
 )
 register_backend(Backend(name="timing", make=_make_timing, serializable=False))
 register_backend(Backend(name="callable", make=_make_callable, serializable=False))

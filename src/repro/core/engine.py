@@ -77,18 +77,32 @@ class MeasurementStore:
     are atomic (temp file + rename) so an interrupted run never corrupts the
     cache.  ``autosave_every`` new entries trigger a flush; 0 disables
     autosave (call :meth:`save` explicitly).
+
+    Besides values, the store carries optional string *metadata* per key —
+    used by the real-measurement backend to persist WHY a config was
+    penalized (``inf``), so a warm-cache run can still report failure
+    reasons.  A store without metadata keeps the legacy flat-JSON file
+    format; one with metadata writes ``{"__format__": 2, "values": ...,
+    "meta": ...}`` (both formats load transparently).  ``inf`` itself
+    round-trips through Python's JSON (``Infinity`` literal).
     """
 
     def __init__(self, path: str | None, autosave_every: int = 4096):
         self.path = path
         self.autosave_every = autosave_every
         self._data: dict[str, float] = {}
+        self._meta: dict[str, str] = {}
         self._dirty = 0
         if path is not None and os.path.exists(path):
             try:
                 with open(path) as f:
-                    self._data = {k: float(v) for k, v in json.load(f).items()}
-            except (json.JSONDecodeError, ValueError, OSError) as e:
+                    raw = json.load(f)
+                if isinstance(raw, dict) and raw.get("__format__") == 2:
+                    self._data = {k: float(v) for k, v in raw["values"].items()}
+                    self._meta = {k: str(v) for k, v in raw.get("meta", {}).items()}
+                else:
+                    self._data = {k: float(v) for k, v in raw.items()}
+            except (json.JSONDecodeError, ValueError, TypeError, OSError) as e:
                 # a cache is not a source of truth: a corrupt/truncated file
                 # (killed run, disk full) must degrade to a cold cache, not
                 # kill the matrix run
@@ -121,16 +135,37 @@ class MeasurementStore:
         if self.autosave_every and self._dirty >= self.autosave_every:
             self.save()
 
+    # -- per-key metadata (penalty reasons) ------------------------------------
+    def get_meta(self, key: str) -> str | None:
+        return self._meta.get(key)
+
+    def put_meta(self, key: str, note: str) -> None:
+        self._meta[key] = str(note)
+        self._dirty += 1
+
+    def meta_items(self):
+        return self._meta.items()
+
+    def update_meta(self, entries) -> None:
+        for k, v in entries:
+            self._meta[k] = str(v)
+            self._dirty += 1
+
     def save(self) -> None:
         if self.path is None:
             return
         d = os.path.dirname(self.path)
         if d:
             os.makedirs(d, exist_ok=True)
+        payload = (
+            {"__format__": 2, "values": self._data, "meta": self._meta}
+            if self._meta
+            else self._data
+        )
         fd, tmp = tempfile.mkstemp(dir=d or ".", suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:
-                json.dump(self._data, f)
+                json.dump(payload, f)
             os.replace(tmp, self.path)
         except BaseException:
             if os.path.exists(tmp):
@@ -163,6 +198,15 @@ class DiskCachedMeasurement(BaseMeasurement):
     def _key(self, config: Config) -> str:
         return f"{self.prefix}|{config_key(config)}"
 
+    def _record(self, key: str, config: Config, value: float) -> None:
+        """Persist a fresh measurement; penalized (non-finite) values carry
+        the inner backend's failure reason as store metadata, so warm-cache
+        runs can still explain WHY a config is invalid."""
+        self._store.put(key, value)
+        if not np.isfinite(value) and hasattr(self._store, "put_meta"):
+            reason = self._inner.reason_for(config)
+            self._store.put_meta(key, reason or "non-finite measurement")
+
     def measure(self, config: Config) -> float:
         self.n_samples += 1
         self.n_dispatches += 1
@@ -171,7 +215,7 @@ class DiskCachedMeasurement(BaseMeasurement):
         if v is None:
             v = self._inner.measure(config)
             self.n_misses += 1
-            self._store.put(k, v)
+            self._record(k, config, v)
         else:
             self._inner.skip_samples(1)
         return float(v)
@@ -203,8 +247,8 @@ class DiskCachedMeasurement(BaseMeasurement):
                 fresh = self._inner.measure_batch(fresh_cfgs)
                 self.n_misses += len(fresh_cfgs)
                 vals[i:j] = fresh
-                for k, v in zip(keys[i:j], fresh):
-                    self._store.put(k, float(v))
+                for k, c, v in zip(keys[i:j], fresh_cfgs, fresh):
+                    self._record(k, c, float(v))
             else:
                 self._inner.skip_samples(j - i)
             i = j
@@ -215,8 +259,28 @@ class DiskCachedMeasurement(BaseMeasurement):
         v = self._store.get(k)
         if v is None:
             v = self._inner.measure_final(config, repeats)
-            self._store.put(k, v)
+            self._record(k, config, float(v))
         return float(v)
+
+    # -- introspection ---------------------------------------------------------
+    def provenance(self) -> dict:
+        p = self._inner.provenance()
+        if p:
+            p = {**p, "cache_hits": self.n_samples - self.n_misses,
+                 "cache_misses": self.n_misses}
+        return p
+
+    def reason_for(self, config: Config) -> str | None:
+        """Served-from-cache penalties keep their reason: store metadata wins,
+        the live inner backend is the fallback."""
+        if hasattr(self._store, "get_meta"):
+            meta = self._store.get_meta(self._key(config))
+            if meta is not None:
+                return meta
+        return self._inner.reason_for(config)
+
+    def repeats_for(self, config: Config) -> list | None:
+        return self._inner.repeats_for(config)
 
     def reset(self) -> None:
         super().reset()

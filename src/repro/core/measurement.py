@@ -32,6 +32,23 @@ class Measurement(Protocol):
     def measure_final(self, config: Config, repeats: int = 10) -> float: ...
 
 
+def fence(out) -> None:
+    """Block until async work behind ``out`` retires.
+
+    jax dispatch is asynchronous: a runner that returns a DeviceArray has
+    only *enqueued* the computation.  Timing backends must call this INSIDE
+    the timed region (and on warmup results, so leftover async work never
+    leaks into the first timed call).  Non-jax results are materialized
+    through numpy; ``None`` means the runner blocked on its own.
+    """
+    if out is None:
+        return
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    else:
+        np.asarray(out)
+
+
 class BaseMeasurement:
     """Common bookkeeping: sample + dispatch counting, final-config repetition.
 
@@ -77,6 +94,20 @@ class BaseMeasurement:
         self.n_samples = 0
         self.n_dispatches = 0
 
+    # -- introspection hooks (wrappers delegate; defaults are inert) ----------
+    def provenance(self) -> dict:
+        """How this backend produced its numbers (timer, device, repeats...).
+        Recorded into the versioned RunRecord; ``{}`` means nothing to say."""
+        return {}
+
+    def reason_for(self, config: Config) -> str | None:
+        """Why ``config`` was penalized (``inf``), if this backend knows."""
+        return None
+
+    def repeats_for(self, config: Config) -> list | None:
+        """Raw per-repeat timings behind the last aggregate for ``config``."""
+        return None
+
 
 class CallableMeasurement(BaseMeasurement):
     def __init__(self, fn: Callable[[Config], float],
@@ -99,15 +130,18 @@ class CallableMeasurement(BaseMeasurement):
 class TimingMeasurement(BaseMeasurement):
     """Times ``runner(config)`` with a monotonic clock.
 
-    ``warmup`` calls are executed once per distinct config before timing so
-    compilation/tracing cost is excluded — the analogue of the paper starting
-    the timer only after host->device transfer.
+    At least one warmup call runs per distinct config before timing (more
+    with ``warmup > 1``), so compilation/tracing cost is always excluded —
+    the analogue of the paper starting the timer only after host->device
+    transfer.  Warmup results AND the timed result are fenced
+    (:func:`fence`): async dispatch retires inside the timed region, never
+    before it or after it.
     """
 
     def __init__(self, runner: Callable[[Config], None], warmup: int = 1):
         super().__init__()
         self._runner = runner
-        self._warmup = warmup
+        self._warmup = max(1, warmup)
         self._warmed: set = set()
 
     def _key(self, config: Config):
@@ -117,10 +151,10 @@ class TimingMeasurement(BaseMeasurement):
         k = self._key(config)
         if k not in self._warmed:
             for _ in range(self._warmup):
-                self._runner(config)
+                fence(self._runner(config))
             self._warmed.add(k)
         t0 = time.perf_counter()
-        self._runner(config)
+        fence(self._runner(config))
         return time.perf_counter() - t0
 
 
@@ -177,6 +211,15 @@ class CachedMeasurement(BaseMeasurement):
 
     def skip_samples(self, n: int) -> None:
         self._inner.skip_samples(n)
+
+    def provenance(self) -> dict:
+        return self._inner.provenance()
+
+    def reason_for(self, config: Config) -> str | None:
+        return self._inner.reason_for(config)
+
+    def repeats_for(self, config: Config) -> list | None:
+        return self._inner.repeats_for(config)
 
     def reset(self) -> None:
         super().reset()

@@ -28,7 +28,7 @@ class SimulatedAnnealing(Searcher):
     def _propose(self, budget: int, result: TuningResult) -> ProposalGen:
         cur = self.space.sample_indices(self.rng, 1)[0]
         cur_v = float((yield [self.space.decode(cur)])[0])
-        scale = abs(cur_v) or 1.0
+        scale = abs(cur_v) if np.isfinite(cur_v) and cur_v else 1.0
         for step in range(budget - 1):
             frac = step / max(1, budget - 2)
             temp = self.t0 * (self.t1 / self.t0) ** frac
@@ -37,6 +37,16 @@ class SimulatedAnnealing(Searcher):
                 if self.space.is_valid(self.space.decode(nxt)):
                     break
             nxt_v = float((yield [self.space.decode(nxt)])[0])
+            # non-finite values (invalid-config penalties from real
+            # measurement backends) short-circuit the Metropolis rule:
+            # inf - inf is NaN, which would wedge the walk on an invalid
+            # start forever
+            if not np.isfinite(nxt_v):
+                continue
+            if not np.isfinite(cur_v):
+                cur, cur_v = nxt, nxt_v
+                scale = abs(cur_v) or 1.0
+                continue
             delta = (nxt_v - cur_v) / scale
             if delta <= 0 or self.rng.random() < np.exp(-delta / max(temp, 1e-12)):
                 cur, cur_v = nxt, nxt_v

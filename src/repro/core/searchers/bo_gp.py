@@ -36,6 +36,24 @@ class BOGPSearcher(Searcher):
         self.n_candidates = n_candidates
         self.n_local = n_local
 
+    @staticmethod
+    def _gp_value(v: float, y_finite: list) -> float:
+        """Observation as the GP sees it: non-finite penalties (invalid
+        configs from a real-measurement backend) become a large FINITE value
+        — strictly worse than any *finite* observation so far — so
+        standardization and the Cholesky stay defined while the surrogate
+        still learns to avoid the region (kernel_tuner does the same with
+        its failure value).  The cap derives from finite observations only:
+        deriving it from previous penalties would compound exponentially.
+        """
+        v = float(v)
+        if np.isfinite(v):
+            return v
+        if y_finite:
+            m = max(y_finite)
+            return m + abs(m) + 1.0
+        return 1.0
+
     def _candidates(self, incumbent: np.ndarray, n: int) -> np.ndarray:
         """Random + incumbent-local candidate pool.
 
@@ -54,10 +72,37 @@ class BOGPSearcher(Searcher):
         init_vals = yield self.space.decode_batch(init_idx)
 
         X = list(init_idx)
-        y = [float(v) for v in init_vals]
+        X_unit: list[np.ndarray] = []
+        y: list[float] = []          # as the GP sees them (penalties clipped)
+        y_fin: list[float] = []      # finite observations only (clip basis)
+        pen_idx: list[int] = []      # positions in y holding clipped penalties
         gp = GaussianProcess()
-        for r, v in zip(init_idx, y):
-            gp.add(self.space.to_unit(r[None, :])[0], v)
+
+        def observe(row: np.ndarray, raw: float) -> None:
+            """Feed one observation to the GP, keeping every stored penalty
+            strictly worse than every finite observation: when the finite
+            max overtakes the current clip value, old penalties are
+            re-clipped and the GP batch-refit (rare — the max only grows
+            O(log n) times), so argmin/EI can never chase an invalid
+            config."""
+            raw = float(raw)
+            if np.isfinite(raw):
+                y_fin.append(raw)
+            else:
+                pen_idx.append(len(y))
+            u = self.space.to_unit(row[None, :])[0]
+            X_unit.append(u)
+            y.append(self._gp_value(raw, y_fin))
+            clip = self._gp_value(float("inf"), y_fin)
+            if pen_idx and any(y[i] != clip for i in pen_idx):
+                for i in pen_idx:
+                    y[i] = clip
+                gp.fit(np.stack(X_unit), np.asarray(y))
+            else:
+                gp.add(u, y[-1])
+
+        for r, v in zip(init_idx, init_vals):
+            observe(r, v)
         seen_keys = self.space.flat_keys(init_idx).tolist()
 
         for _ in range(budget - n_init):
@@ -70,8 +115,7 @@ class BOGPSearcher(Searcher):
             mu, sigma = gp.predict(self.space.to_unit(fresh))
             ei = expected_improvement(mu, sigma, best=float(np.min(y)))
             pick = fresh[int(np.argmax(ei))]
-            v = float((yield [self.space.decode(pick)])[0])
+            raw = float((yield [self.space.decode(pick)])[0])
             X.append(pick)
-            y.append(v)
-            gp.add(self.space.to_unit(pick[None, :])[0], v)
+            observe(pick, raw)
             seen_keys.append(int(self.space.flat_keys(pick[None, :])[0]))

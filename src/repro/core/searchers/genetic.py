@@ -80,6 +80,7 @@ class GeneticAlgorithm(Searcher):
         population = self.space.sample_indices(self.rng, pop_n)
         fitness = yield from self._evaluate(population, seen)
 
+        stale = 0  # generations that measured nothing new
         while len(population) >= 2:
             order = np.argsort(fitness)
             n_keep = max(2, len(population) // 2)
@@ -110,7 +111,20 @@ class GeneticAlgorithm(Searcher):
             if not children:
                 break
             child_idx = np.array(children)
+            n_seen = len(seen)
             child_fit = yield from self._evaluate(child_idx, seen)
+            # a small (or fully explored) space can leave every breedable
+            # child a revisit: without a yield the generator would spin
+            # forever while the engine waits for proposals.  Stop when the
+            # space is provably exhausted, or after many consecutive
+            # all-revisit generations (a converged population on a large
+            # space recovers within a couple via mutation — 50 without a
+            # single fresh config means there is nothing left to measure).
+            if len(seen) >= self.space.cardinality:
+                break
+            stale = stale + 1 if len(seen) == n_seen else 0
+            if stale >= 50:
+                break
             population = np.concatenate([survivors, child_idx])
             fitness = np.concatenate([fitness[order[:n_keep]], child_fit])
             if len(population) > pop_n:

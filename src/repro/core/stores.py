@@ -45,6 +45,12 @@ class SqliteMeasurementStore:
             "CREATE TABLE IF NOT EXISTS measurements "
             "(key TEXT PRIMARY KEY, value REAL NOT NULL)"
         )
+        # per-key string metadata (penalty reasons from the real-measurement
+        # backend); mirrors MeasurementStore's meta side-channel
+        self._conn.execute(
+            "CREATE TABLE IF NOT EXISTS meta "
+            "(key TEXT PRIMARY KEY, note TEXT NOT NULL)"
+        )
         self._conn.commit()
 
     def __len__(self) -> int:
@@ -80,6 +86,33 @@ class SqliteMeasurementStore:
         self._conn.executemany(
             "INSERT OR REPLACE INTO measurements (key, value) VALUES (?, ?)",
             ((k, float(v)) for k, v in entries),
+        )
+        self.save()
+
+    # -- per-key metadata (penalty reasons) ------------------------------------
+    def get_meta(self, key: str) -> str | None:
+        row = self._conn.execute(
+            "SELECT note FROM meta WHERE key = ?", (key,)
+        ).fetchone()
+        return None if row is None else str(row[0])
+
+    def put_meta(self, key: str, note: str) -> None:
+        self._conn.execute(
+            "INSERT OR REPLACE INTO meta (key, note) VALUES (?, ?)",
+            (key, str(note)),
+        )
+        self._dirty += 1
+        if self.autosave_every and self._dirty >= self.autosave_every:
+            self.save()
+
+    def meta_items(self) -> Iterator[tuple[str, str]]:
+        for key, note in self._conn.execute("SELECT key, note FROM meta"):
+            yield key, str(note)
+
+    def update_meta(self, entries: Iterable[tuple[str, str]]) -> None:
+        self._conn.executemany(
+            "INSERT OR REPLACE INTO meta (key, note) VALUES (?, ?)",
+            ((k, str(v)) for k, v in entries),
         )
         self.save()
 

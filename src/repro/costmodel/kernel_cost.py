@@ -227,6 +227,15 @@ class CostModelMeasurement(BaseMeasurement):
             return base
         return float(np.median(base * self._noise_factors(repeats)))
 
+    def provenance(self) -> dict:
+        return {
+            "backend": "costmodel",
+            "kernel": self.workload.name,
+            "chip": self.chip.name,
+            "noise": bool(self.noise),
+            "timer": "analytical",
+        }
+
 
 def executable_space(w: KernelWorkload, chip: ChipModel) -> SearchSpace:
     """The paper's 6-param space constrained to executable configs

@@ -16,10 +16,13 @@ violations within +-4 iterations' (the 'discrete boundary' tolerance class).
 entry points for the InterpretTimer measurement backend (examples/).
 """
 
+from .add.ops import BENCH as _add_bench
 from .add.ops import add
 from .add.ref import add_ref
+from .harris.ops import BENCH as _harris_bench
 from .harris.ops import harris
 from .harris.ref import harris_ref
+from .mandelbrot.ops import BENCH as _mandelbrot_bench
 from .mandelbrot.ops import mandelbrot
 from .mandelbrot.ref import mandelbrot_ref
 
@@ -27,6 +30,12 @@ TUNABLE_KERNELS = {
     "add": add,
     "harris": harris,
     "mandelbrot": mandelbrot,
+}
+
+#: per-kernel resource/input descriptors consumed by the real-measurement
+#: backend (repro.pallas_bench) — each kernel package owns its own entry.
+KERNEL_BENCHES = {
+    b.name: b for b in (_add_bench, _harris_bench, _mandelbrot_bench)
 }
 
 __all__ = [
@@ -37,4 +46,5 @@ __all__ = [
     "mandelbrot",
     "mandelbrot_ref",
     "TUNABLE_KERNELS",
+    "KERNEL_BENCHES",
 ]

@@ -4,10 +4,12 @@ from __future__ import annotations
 
 from functools import partial
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
-from ..common import Config, geometry_from_config
+from ..common import Config, KernelBenchSpec, geometry_from_config
 from .kernel import add_pallas
 
 
@@ -32,3 +34,20 @@ def add(a: jnp.ndarray, b: jnp.ndarray, config: Config | None = None) -> jnp.nda
         w_y=cfg.get("w_y", 1),
         w_z=cfg.get("w_z", 1),
     )
+
+
+def _bench_inputs(x: int, y: int, seed: int) -> tuple:
+    rng = np.random.default_rng(seed)
+    return (
+        jnp.asarray(rng.standard_normal((x, y)), jnp.float32),
+        jnp.asarray(rng.standard_normal((x, y)), jnp.float32),
+    )
+
+
+#: resource + input model for the real-measurement backend (pallas_bench)
+BENCH = KernelBenchSpec(
+    name="add",
+    n_inputs=2,
+    make_inputs=_bench_inputs,
+    run=lambda inputs, cfg, x, y: add(inputs[0], inputs[1], cfg),
+)

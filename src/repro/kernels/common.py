@@ -22,8 +22,9 @@ backend the same pallas_call lowers to Mosaic.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from math import ceil
+from typing import Callable
 
 import jax
 
@@ -42,6 +43,35 @@ class KernelGeometry:
     @property
     def rows_step(self) -> int:
         return self.bm * self.tz
+
+
+@dataclass(frozen=True)
+class KernelBenchSpec:
+    """What a kernel package publishes to the real-measurement backend
+    (:mod:`repro.pallas_bench`): its per-block resource model (same fields as
+    ``costmodel.KernelWorkload``, so the validity pre-screen and the
+    analytical model agree on VMEM footprints) plus the two callables the
+    bench harness needs — deterministic input materialization and the jitted
+    entry point.
+
+    ``make_inputs(x, y, seed)`` must be a pure function of its arguments so
+    shard workers rebuild bit-identical problems from a JSON spec alone.
+    ``run(inputs, cfg, x, y)`` returns the (possibly still in-flight) device
+    array; the harness owns fencing and timing.  ``wz_in_program`` records
+    whether ``w_z`` changes the compiled program — today the Pallas/Mosaic
+    pipeliner owns buffer counts (see module docstring), so configs differing
+    only in ``w_z`` share one compilation-cache entry.
+    """
+
+    name: str
+    n_inputs: int
+    make_inputs: Callable[[int, int, int], tuple] = field(repr=False, default=None)
+    run: Callable[..., object] = field(repr=False, default=None)
+    n_outputs: int = 1
+    halo: int = 0
+    scratch_tiles: int = 0
+    bpe: int = 4
+    wz_in_program: bool = False
 
 
 def geometry_from_config(cfg: Config) -> KernelGeometry:

@@ -9,10 +9,12 @@ from __future__ import annotations
 
 from functools import partial
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
-from ..common import Config, geometry_from_config
+from ..common import Config, KernelBenchSpec, geometry_from_config
 from .kernel import harris_pallas
 
 
@@ -40,3 +42,19 @@ def harris(img: jnp.ndarray, config: Config | None = None) -> jnp.ndarray:
         w_y=cfg.get("w_y", 1),
         w_z=cfg.get("w_z", 1),
     )
+
+
+def _bench_inputs(x: int, y: int, seed: int) -> tuple:
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.standard_normal((x, y)), jnp.float32),)
+
+
+#: resource model mirrors costmodel.HARRIS (halo-2 stencil, 5 scratch tiles)
+BENCH = KernelBenchSpec(
+    name="harris",
+    n_inputs=1,
+    make_inputs=_bench_inputs,
+    run=lambda inputs, cfg, x, y: harris(inputs[0], cfg),
+    halo=2,
+    scratch_tiles=5,
+)

@@ -6,7 +6,7 @@ from functools import partial
 
 import jax
 
-from ..common import Config, geometry_from_config
+from ..common import Config, KernelBenchSpec, geometry_from_config
 from .kernel import mandelbrot_pallas
 from .ref import MAX_ITER
 
@@ -32,3 +32,13 @@ def mandelbrot(x: int, y: int, config: Config | None = None, max_iter: int = MAX
         w_y=cfg.get("w_y", 1),
         w_z=cfg.get("w_z", 1),
     )
+
+
+#: generator kernel — no input arrays; the image size IS the problem
+BENCH = KernelBenchSpec(
+    name="mandelbrot",
+    n_inputs=0,
+    make_inputs=lambda x, y, seed: (),
+    run=lambda inputs, cfg, x, y: mandelbrot(x, y, cfg),
+    scratch_tiles=2,
+)

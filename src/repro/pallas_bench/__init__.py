@@ -1,0 +1,76 @@
+"""repro.pallas_bench — real-measurement backend for the tuning engine.
+
+Turns the repo from a cost-model simulator into a real autotuner: compiles
+and times actual ``pl.pallas_call`` kernels (interpret mode on CPU, Mosaic
+on TPU with no code change) behind the same batched ``measure_batch``
+protocol the analytical backend serves.  Registered as the name-serializable
+``BACKENDS["pallas"]`` entry, so
+
+    repro.tune(TuningSpec(kernel="harris", backend="pallas", budget=100))
+
+and sharded ``tune_matrix`` runs work end-to-end from JSON alone.
+
+Layout:
+    workloads.py  deterministic problem materialization from spec kwargs
+    validity.py   geometry pre-screen + structured InvalidMeasurement penalty
+    measure.py    PallasMeasurement: compile cache, warmup, N-repeat timing
+
+See docs/pallas_backend.md for the timing protocol and cache keying.
+"""
+
+from ..core.space import Param, SearchSpace
+from .measure import PallasMeasurement
+from .validity import (
+    DEFAULT_MAX_GRID,
+    DEFAULT_VMEM_LIMIT,
+    InvalidMeasurement,
+    fit_constraint,
+    validate_config,
+    vmem_footprint,
+)
+from .workloads import DEFAULT_X, DEFAULT_Y, PallasWorkload, make_workload
+
+__all__ = [
+    "DEFAULT_MAX_GRID",
+    "DEFAULT_VMEM_LIMIT",
+    "DEFAULT_X",
+    "DEFAULT_Y",
+    "InvalidMeasurement",
+    "PallasMeasurement",
+    "PallasWorkload",
+    "default_space",
+    "fit_constraint",
+    "make_workload",
+    "validate_config",
+    "vmem_footprint",
+]
+
+
+def default_space(
+    kernel: str = "add",
+    x: int = DEFAULT_X,
+    y: int = DEFAULT_Y,
+    vmem_limit: int = DEFAULT_VMEM_LIMIT,
+    max_grid: int = DEFAULT_MAX_GRID,
+    **_,
+) -> SearchSpace:
+    """The paper's 6-parameter space constrained to runnable geometries.
+
+    Mirrors the costmodel backend's executable-config space: constrained
+    searchers only propose configs that pass the validity pre-screen, while
+    SMBO methods (which strip the constraint per the paper) propose freely
+    and observe ``inf`` penalties.  The constraint carries a stable id
+    (``pallas_fit:...``) so serialized specs rebuild it by name.
+    """
+    workload = make_workload(kernel, x=x, y=y)
+    params = [
+        Param.int_range("t_x", 1, 16),
+        Param.int_range("t_y", 1, 16),
+        Param.int_range("t_z", 1, 16),
+        Param.int_range("w_x", 1, 8),
+        Param.int_range("w_y", 1, 8),
+        Param.int_range("w_z", 1, 8),
+    ]
+    return SearchSpace(
+        params, constraint=fit_constraint(workload, vmem_limit, max_grid)
+    )

@@ -1,0 +1,224 @@
+"""Compile-and-time measurement of real ``pl.pallas_call`` kernels.
+
+:class:`PallasMeasurement` is the objective function the ISSUE's real-
+measurement path plugs into the batched ask/tell engine:
+
+* **compile once per geometry** — a keyed compilation cache maps each
+  distinct kernel geometry to its warmed, ready-to-time callable.  Configs
+  that lower to the same program (today: any two configs differing only in
+  ``w_z``, which the Mosaic pipeliner owns) share one cache entry, so the
+  searcher revisiting a geometry never pays tracing/lowering again.
+  ``n_compiles`` counts actual compilations — the figure a warm disk cache
+  drives to zero.
+* **warmup + N-repeat timing** — every measurement runs ``warmup`` fenced
+  calls (the compile call counts as the first), then ``repeats`` timed calls,
+  each fenced with ``jax.block_until_ready`` INSIDE the timed region (the
+  analogue of the paper timing after H2D and before D2H).  The robust
+  aggregate is the median; all repeats are recorded (``repeats_for``) so the
+  run record can carry the raw distribution.
+* **failures become penalties** — the validity pre-screen and any
+  compile/run exception map to a structured
+  :class:`~repro.pallas_bench.validity.InvalidMeasurement`:
+  the searcher sees ``float("inf")`` through the ordinary ``tell`` path
+  (kernel_tuner-style) and the reason survives into the measurement store.
+
+On CPU the kernels run in Pallas interpret mode (``kernels.common
+.use_interpret``); on a real TPU the same ``pallas_call`` lowers to Mosaic
+with no change here — only the provenance dict's ``interpret``/
+``device_kind`` fields flip.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from ..core.measurement import BaseMeasurement, fence
+from ..core.engine import config_key
+from ..kernels.common import Config, geometry_from_config
+from .validity import (
+    DEFAULT_MAX_GRID,
+    DEFAULT_VMEM_LIMIT,
+    InvalidMeasurement,
+    validate_config,
+)
+from .workloads import PallasWorkload
+
+
+class PallasMeasurement(BaseMeasurement):
+    """Measures real kernel wall-clock; never raises on a bad config.
+
+    ``repeats``/``warmup`` follow the kernel_tuner defaults (time several
+    runs, keep a robust aggregate).  ``validate=False`` disables the
+    pre-screen (compile/run failures are still caught) — useful to audit the
+    screen itself.  ``seed`` is accepted for backend-factory uniformity;
+    wall-clock timing has no noise stream to seed.
+    """
+
+    def __init__(
+        self,
+        workload: PallasWorkload,
+        *,
+        repeats: int = 5,
+        warmup: int = 1,
+        vmem_limit: int = DEFAULT_VMEM_LIMIT,
+        max_grid: int = DEFAULT_MAX_GRID,
+        validate: bool = True,
+    ):
+        super().__init__()
+        if repeats < 1:
+            raise ValueError("repeats must be >= 1")
+        self.workload = workload
+        self.repeats = int(repeats)
+        self.warmup = int(warmup)
+        self.vmem_limit = int(vmem_limit)
+        self.max_grid = int(max_grid)
+        self.validate = validate
+        self.n_compiles = 0
+        #: config_key -> InvalidMeasurement for every penalized config served
+        self.invalid: dict[str, InvalidMeasurement] = {}
+        #: config_key -> per-repeat seconds of the last search measurement
+        self.repeat_log: dict[str, list[float]] = {}
+        #: config_key -> per-repeat seconds of the last final re-measurement
+        self.final_repeat_log: dict[str, list[float]] = {}
+        self._inputs: tuple | None = None
+        #: geometry key -> warmed callable (or InvalidMeasurement for a
+        #: geometry whose compile failed — retrying would fail identically)
+        self._compiled: dict[tuple, Callable | InvalidMeasurement] = {}
+
+    # -- compilation cache -----------------------------------------------------
+    def _geom_key(self, cfg: Config) -> tuple:
+        g = geometry_from_config(cfg)
+        key = (g.bm, g.bn, g.tz, g.wx, g.wy)
+        return key + (g.wz,) if self.workload.bench.wz_in_program else key
+
+    def _run_config(self, cfg: Config) -> Config:
+        """The config actually launched: ``w_z`` is pinned when it does not
+        enter the program, so jax's jit cache coalesces with ours."""
+        if self.workload.bench.wz_in_program:
+            return cfg
+        return {**cfg, "w_z": 1}
+
+    def _get_compiled(self, cfg: Config) -> Callable | InvalidMeasurement:
+        """Warmed zero-arg runner for cfg's geometry, compiling on first use."""
+        gkey = self._geom_key(cfg)
+        hit = self._compiled.get(gkey)
+        if hit is not None:
+            return hit
+        if self._inputs is None:
+            self._inputs = self.workload.materialize()
+        inputs, run_cfg = self._inputs, self._run_config(cfg)
+
+        def fn():
+            return self.workload.run(inputs, run_cfg)
+
+        try:
+            self.n_compiles += 1
+            fence(fn())                       # trace + lower + first run
+            for _ in range(max(0, self.warmup - 1)):
+                fence(fn())
+        except Exception as e:  # noqa: BLE001 — any compile failure is a penalty
+            bad = InvalidMeasurement(
+                reason=f"{type(e).__name__}: {e}", stage="compile"
+            )
+            self._compiled[gkey] = bad
+            return bad
+        self._compiled[gkey] = fn
+        return fn
+
+    # -- timing ----------------------------------------------------------------
+    def _timed_repeats(self, fn: Callable, repeats: int) -> list[float] | InvalidMeasurement:
+        times = []
+        for _ in range(repeats):
+            try:
+                t0 = time.perf_counter()
+                fence(fn())
+                times.append(time.perf_counter() - t0)
+            except Exception as e:  # noqa: BLE001 — runtime failure -> penalty
+                return InvalidMeasurement(
+                    reason=f"{type(e).__name__}: {e}", stage="run"
+                )
+        return times
+
+    def _measure_repeats(self, config: Config, repeats: int) -> list[float] | InvalidMeasurement:
+        if self.validate:
+            reason = validate_config(
+                self.workload, config, self.vmem_limit, self.max_grid
+            )
+            if reason is not None:
+                return InvalidMeasurement(reason=reason, stage="validity")
+        fn = self._get_compiled(config)
+        if isinstance(fn, InvalidMeasurement):
+            return fn
+        return self._timed_repeats(fn, repeats)
+
+    def _measure_one(self, config: Config) -> float:
+        key = config_key(config)
+        out = self._measure_repeats(config, self.repeats)
+        if isinstance(out, InvalidMeasurement):
+            self.invalid[key] = out
+            return out.penalty
+        self.repeat_log[key] = out
+        return float(np.median(out))
+
+    def measure_batch(self, configs: Sequence[Config]) -> np.ndarray:
+        """One Python-level dispatch per batch; kernels still execute
+        sequentially (device timing must not overlap)."""
+        self.n_samples += len(configs)
+        self.n_dispatches += 1
+        return np.array(
+            [float(self._measure_one(c)) for c in configs], dtype=np.float64
+        )
+
+    def measure_final(self, config: Config, repeats: int = 10) -> float:
+        """Paper protocol: the winner re-measured ``repeats`` times, median
+        kept; raw repeats land in ``final_repeat_log`` for the run record."""
+        key = config_key(config)
+        out = self._measure_repeats(config, repeats)
+        if isinstance(out, InvalidMeasurement):
+            self.invalid[key] = out
+            return out.penalty
+        self.final_repeat_log[key] = out
+        return float(np.median(out))
+
+    # -- introspection (RunRecord provenance, disk-cache metadata) ------------
+    def reason_for(self, config: Config) -> str | None:
+        bad = self.invalid.get(config_key(config))
+        return None if bad is None else bad.to_meta()
+
+    def repeats_for(self, config: Config) -> list[float] | None:
+        key = config_key(config)
+        return self.final_repeat_log.get(key) or self.repeat_log.get(key)
+
+    def provenance(self) -> dict:
+        """Backend provenance for the versioned RunRecord: how timings were
+        taken and on what — the fields that distinguish an interpret-mode CPU
+        run from a real-TPU run of the same spec."""
+        import jax
+
+        dev = jax.devices()[0]
+        return {
+            "backend": "pallas",
+            "kernel": self.workload.name,
+            "x": self.workload.x,
+            "y": self.workload.y,
+            "input_seed": self.workload.input_seed,
+            "interpret": bool(self.workload.interpret()),
+            "platform": jax.default_backend(),
+            "device_kind": dev.device_kind,
+            "repeats": self.repeats,
+            "warmup": self.warmup,
+            "timer": "perf_counter",
+            "n_compiles": self.n_compiles,
+            "n_invalid": len(self.invalid),
+        }
+
+    def reset(self) -> None:
+        """Clear counters and logs; the compilation cache survives (compiled
+        programs are still valid — that is the point of the cache)."""
+        super().reset()
+        self.invalid.clear()
+        self.repeat_log.clear()
+        self.final_repeat_log.clear()
