@@ -3,7 +3,7 @@
 # themselves when absent).
 PYTHON ?= python
 
-.PHONY: test test-fast bench lint install-dev smoke-pallas
+.PHONY: test test-fast bench lint install-dev smoke-pallas smoke-matrix
 
 test:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q
@@ -13,6 +13,18 @@ test:
 # nonzero if the tuned config did not actually run
 smoke-pallas:
 	PYTHONPATH=src $(PYTHON) examples/tune_kernel_interpret.py
+
+# tier-2: a small paper matrix through the work-unit executor layer — first
+# pass fans units across 2 worker processes, second pass (--force, same
+# store) must resume entirely from the unit journal
+smoke-matrix:
+	rm -rf results/smoke_matrix
+	PYTHONPATH=src $(PYTHON) -m benchmarks.paper_matrix --design scaled --budget 100 \
+	  --bench add --chip v5e --algos rs,ga --out results/smoke_matrix \
+	  --executor process --max-workers 2 --resume
+	PYTHONPATH=src $(PYTHON) -m benchmarks.paper_matrix --design scaled --budget 100 \
+	  --bench add --chip v5e --algos rs,ga --out results/smoke_matrix \
+	  --executor process --max-workers 2 --resume --force
 
 lint:
 	ruff check src tests benchmarks examples

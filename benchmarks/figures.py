@@ -114,6 +114,28 @@ def fig4b_cles(results: dict) -> dict:
     return table
 
 
+def search_cost(results: dict) -> dict:
+    """{(bench, chip): {algo: {S: wall seconds}}} — per-cell search cost.
+
+    The work-unit layer records wall-clock per executed unit and the session
+    aggregates it per cell into ``RunRecord.extra["cell_wall_s"]`` (sums of
+    unit walls, so the number is total compute even for parallel runs).
+    Plot alongside the quality tables: the paper's 'which algorithm at which
+    sample size' question is really quality *per unit of search cost*.
+    Combos recorded before the wall-clock landed are skipped.
+    """
+    table = {}
+    for key, (_, meta) in results.items():
+        rows = meta.get("cell_wall_s")
+        if not rows:
+            continue
+        t: dict = {}
+        for r in rows:
+            t.setdefault(r["algo"], {})[r["sample_size"]] = float(r["wall_s"])
+        table[key] = t
+    return table
+
+
 def mwu_vs_rs(results: dict) -> dict:
     """{(bench, chip): {algo: {S: p-value}}} (alpha = 0.01 in the paper)."""
     table = {}

@@ -7,13 +7,19 @@ x 5 algorithms (rs / rf / ga / bo_gp / bo_tpe)  x  sample sizes
 (or a budget-scaled design) — the reproduction of the paper's ~3,019,500
 samples.  Each (benchmark, chip) combo is one declarative
 :class:`TuningSpec`; results are persisted per combo (``.npz`` + versioned
-``RunRecord`` JSON) so interrupted runs resume, and ``--shards N`` fans the
-matrix cells of each combo across N worker processes (bit-identical to the
-single-process run).
+``RunRecord`` JSON) so finished combos are skipped on re-run.
+
+Each combo decomposes into work units run through the ``EXECUTORS``
+registry: ``--executor process --max-workers N`` fans units (including
+within-cell splits of the big-E rows) across N workers, bit-identical to
+the serial run; ``--resume`` replays units an interrupted run already
+journaled in the measurement store, re-measuring nothing.  ``--shards N``
+is the legacy spelling of the process executor.
 
 Usage:
     PYTHONPATH=src python -m benchmarks.paper_matrix --design paper
-    PYTHONPATH=src python -m benchmarks.paper_matrix --design scaled --budget 2000 --shards 4
+    PYTHONPATH=src python -m benchmarks.paper_matrix --design scaled --budget 2000 \\
+        --executor process --max-workers 4 --store sqlite --resume
 """
 
 from __future__ import annotations
@@ -87,12 +93,16 @@ def combo_spec(bench: str, chip_name: str, design: ExperimentDesign,
 def run_combo(bench: str, chip_name: str, design: ExperimentDesign, out_dir: str,
               algorithms=ALGOS, seed: int = 0, verbose: bool = True,
               cache: bool = True, dispatch: str = "batch", shards: int = 1,
-              store: str = "json", backend: str = "costmodel") -> None:
+              store: str = "json", backend: str = "costmodel",
+              executor: str | None = None, max_workers: int | None = None,
+              resume: bool = False) -> None:
     spec = combo_spec(bench, chip_name, design, out_dir, algorithms=algorithms,
                       seed=seed, cache=cache, dispatch=dispatch, store=store,
                       backend=backend)
     t0 = time.time()
-    repro.tune_matrix(spec, shards=shards, out_dir=out_dir, verbose=verbose)
+    repro.tune_matrix(spec, shards=shards, executor=executor,
+                      max_workers=max_workers, resume=resume,
+                      out_dir=out_dir, verbose=verbose)
     record = repro.RunRecord.load(
         os.path.join(out_dir, f"{bench}_{chip_name}.json")
     )
@@ -112,7 +122,24 @@ def main() -> None:
     ap.add_argument("--budget", type=int, default=2000,
                     help="per-cell sample budget for --design scaled")
     ap.add_argument("--shards", type=int, default=1,
-                    help="worker processes per combo (cells fan out)")
+                    help="legacy spelling of --executor process --max-workers N")
+    ap.add_argument("--executor", choices=("serial", "process", "futures"),
+                    default=None,
+                    help="EXECUTORS registry entry running each combo's "
+                         "work units (default: serial, or process when "
+                         "workers > 1)")
+    ap.add_argument("--max-workers", type=int, default=None,
+                    help="worker count for parallel executors (units fan "
+                         "out, including within-cell splits of big-E rows)")
+    ap.add_argument("--resume", action="store_true",
+                    help="replay units journaled in the measurement store "
+                         "by an interrupted run (zero re-measurements)")
+    ap.add_argument("--bench", default=None,
+                    help="run only this benchmark (default: all)")
+    ap.add_argument("--chip", default=None,
+                    help="run only this chip model (default: all)")
+    ap.add_argument("--algos", default=None,
+                    help="comma-separated algorithm subset (default: all 5)")
     ap.add_argument("--store", choices=("json", "sqlite"), default="json",
                     help="measurement-cache backend (sqlite for paper-exact runs)")
     ap.add_argument("--backend", choices=("costmodel", "pallas"),
@@ -137,16 +164,21 @@ def main() -> None:
 
     # real measurement: the chip model axis collapses — the device is the chip
     chips = CHIP_NAMES if args.backend == "costmodel" else ("pallas",)
+    benches = BENCHMARKS if args.bench is None else (args.bench,)
+    if args.chip is not None:
+        chips = (args.chip,)
+    algos = ALGOS if args.algos is None else tuple(args.algos.split(","))
     t0 = time.time()
-    for bench in BENCHMARKS:
+    for bench in benches:
         for chip_name in chips:
             path = combo_path(out_dir, bench, chip_name)
             if os.path.exists(path) and not args.force:
                 print(f"[matrix] skip existing {path}")
                 continue
-            run_combo(bench, chip_name, design, out_dir,
+            run_combo(bench, chip_name, design, out_dir, algorithms=algos,
                       shards=args.shards, store=args.store,
-                      backend=args.backend)
+                      backend=args.backend, executor=args.executor,
+                      max_workers=args.max_workers, resume=args.resume)
     print(f"[matrix] all combos done in {(time.time()-t0)/60:.1f} min -> {out_dir}")
 
 

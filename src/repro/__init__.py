@@ -26,11 +26,15 @@ from .core.api import (
     tune_matrix,
 )
 from .core.backends import BACKENDS, Backend, make_measurement, register_backend
+from .core.executors import EXECUTORS, Executor, register_executor
 from .core.stores import STORES, make_store
 
 __all__ = [
     "BACKENDS",
     "Backend",
+    "EXECUTORS",
+    "Executor",
+    "register_executor",
     "RunRecord",
     "STORES",
     "TuningSession",

@@ -19,7 +19,15 @@ from .stores import STORES, SqliteMeasurementStore, make_store
 from .backends import BACKENDS, Backend, make_measurement, register_backend
 from .experiment import ExperimentDesign
 from .dataset import SampleDataset
-from .runner import CellResult, MatrixResults, MatrixRunner, stable_seed
+from .runner import CellResult, MatrixResults, stable_seed
+from .workunits import (
+    ExperimentUnit,
+    UnitJournal,
+    UnitResult,
+    build_units,
+    merge_unit_results,
+)
+from .executors import EXECUTORS, Executor, register_executor
 from .searchers import (
     EXTRA_ALGORITHMS,
     PAPER_ALGORITHMS,
@@ -62,8 +70,15 @@ __all__ = [
     "SampleDataset",
     "CellResult",
     "MatrixResults",
-    "MatrixRunner",
     "stable_seed",
+    "ExperimentUnit",
+    "UnitJournal",
+    "UnitResult",
+    "build_units",
+    "merge_unit_results",
+    "EXECUTORS",
+    "Executor",
+    "register_executor",
     "SEARCHERS",
     "PAPER_ALGORITHMS",
     "EXTRA_ALGORITHMS",

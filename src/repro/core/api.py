@@ -10,10 +10,14 @@ One declarative entry point replaces the bespoke wiring that used to live in
 * :class:`TuningSession` — the driver that owns evaluation: it runs the
   ask/tell loop (through the engine's ``drive`` primitive, on
   ``Searcher.start/ask/tell/finish`` + ``MeasurementStore``), runs single
-  searches and full experiment matrices, and fans matrix cells out across
-  ``multiprocessing`` workers (``shards=N``) with per-shard stores merged at
-  the end.  Cell seeds derive from the spec alone, so sharded and
-  single-process runs are bit-identical.
+  searches and full experiment matrices.  Matrix runs decompose into
+  serializable :class:`~repro.core.workunits.ExperimentUnit` work units
+  (contiguous experiment ranges of a cell) executed through the pluggable
+  ``EXECUTORS`` registry (``serial`` / ``process`` / ``futures``), with
+  completed units journaled through the measurement store for
+  ``resume=True`` checkpointing.  Experiment seeds derive from the spec
+  alone, so every executor — and every split of a cell into units — is
+  bit-identical to the serial loop.
 * :class:`RunRecord` — a versioned JSON schema (spec + result summary +
   provenance) emitted next to each saved result; the stats/figure layer
   consumes it.
@@ -40,6 +44,7 @@ import os
 import platform
 import socket
 import time
+import warnings
 from dataclasses import dataclass, field, replace
 from datetime import datetime, timezone
 from typing import Callable
@@ -49,6 +54,7 @@ import numpy as np
 from .backends import BACKENDS, make_measurement
 from .dataset import SampleDataset
 from .engine import DISPATCH_MODES, DiskCachedMeasurement, drive
+from .executors import EXECUTORS, ExecutionPlan, recover_shard_stores, run_units
 from .experiment import ExperimentDesign
 from .measurement import BaseMeasurement
 from .runner import CellResult, MatrixResults, stable_seed
@@ -57,6 +63,13 @@ from .searchers.base import TuningResult
 from .space import Config, Param, SearchSpace, _paper_wg256
 from .stores import STORES, make_store
 from .surrogates.forest_batched import BatchedForest
+from .workunits import (
+    ExperimentUnit,
+    UnitJournal,
+    UnitResult,
+    build_units,
+    merge_unit_results,
+)
 
 SPEC_VERSION = 1
 RUN_RECORD_VERSION = 1
@@ -373,13 +386,14 @@ class TuningSession:
     registries), drives the ask/tell loop (the engine's ``drive`` primitive),
     wraps measurements in the persistent store cache when configured,
     re-measures winners per the paper's final-repeats protocol, and — for
-    matrix runs — fans cells out across processes (:meth:`run_matrix` with
-    ``shards > 1``).
+    matrix runs — decomposes the matrix into work units executed through the
+    ``EXECUTORS`` registry (:meth:`run_matrix` with ``executor=...`` /
+    ``max_workers=N``; the legacy ``shards=N`` spelling delegates there).
 
     Keyword overrides (``space`` / ``measurement_factory`` / ``dataset`` /
-    ``store``) exist for in-process callers that hold live objects (the
-    deprecated ``MatrixRunner`` shim); a session with overrides cannot be
-    sharded because workers rebuild everything from the serialized spec.
+    ``store``) exist for in-process callers that hold live objects; a
+    session with overrides only runs under the ``serial`` executor because
+    parallel workers rebuild everything from the serialized spec.
     """
 
     def __init__(
@@ -427,6 +441,8 @@ class TuningSession:
         self._dataset = dataset
         self.measurement: BaseMeasurement | None = None  # last single-run backend
         self.last_record: RunRecord | None = None
+        self.last_unit_plan: list[ExperimentUnit] = []
+        self._last_cell_walls: dict[tuple[str, int], float] = {}
 
     # -- wiring ---------------------------------------------------------------
     def _make_measurement(self, exp_seed: int) -> BaseMeasurement:
@@ -509,13 +525,92 @@ class TuningSession:
             for s, e in self.spec.design.rows()
         ]
 
-    def run_matrix(self, shards: int = 1) -> MatrixResults:
+    def run_matrix(
+        self,
+        shards: int = 1,
+        *,
+        executor: str | None = None,
+        max_workers: int | None = None,
+        resume: bool = False,
+        unit_experiments: int | None = None,
+        futures_pool=None,
+    ) -> MatrixResults:
+        """Run the experiment matrix through the executor layer.
+
+        The matrix decomposes into :class:`ExperimentUnit` work units —
+        whole cells by default, within-cell experiment ranges when
+        ``max_workers`` exceeds the cell count or ``unit_experiments`` caps
+        the unit size — executed through ``EXECUTORS[executor]`` and merged
+        deterministically by unit key, so every executor (and every split)
+        is bit-identical to the serial loop.
+
+        ``shards=N`` is the legacy spelling of ``executor="process",
+        max_workers=N``.  ``resume=True`` replays completed units from the
+        store's unit journal (zero re-measurements) and first absorbs any
+        shard stores a killed parallel run left behind.
+        """
         t0 = time.time()
         cells = self.cells()
-        if shards > 1 and len(cells) > 1:
-            cell_results = self._run_sharded(cells, shards)
-        else:
-            cell_results = [self.run_cell(a, s, e) for a, s, e in cells]
+        name = executor
+        if name is None:
+            name = "futures" if futures_pool is not None else None
+        if futures_pool is not None and name != "futures":
+            raise ValueError(
+                f"futures_pool only applies to executor='futures', not {name!r}"
+            )
+        if max_workers is None and futures_pool is not None:
+            # a supplied pool IS the parallelism request; size from the pool
+            max_workers = getattr(futures_pool, "_max_workers", None) or 2
+        workers = int(max_workers if max_workers is not None else shards)
+        if workers < 1:
+            raise ValueError("max_workers must be >= 1")
+        if name is None:
+            name = "process" if workers > 1 else "serial"
+        if name not in EXECUTORS:
+            raise KeyError(f"unknown executor {name!r}; have {sorted(EXECUTORS)}")
+        units = build_units(
+            cells,
+            min_units=workers if EXECUTORS[name].parallel else 1,
+            max_unit_experiments=unit_experiments,
+        )
+        self.last_unit_plan = units
+        journal = self.unit_journal()
+        if resume and journal is None:
+            warnings.warn(
+                "resume=True needs a spec-described persistent store "
+                "(TuningSpec.store, no in-process overrides); running "
+                "everything fresh"
+            )
+        done: list[UnitResult] = []
+        pending = units
+        if resume and journal is not None:
+            recover_shard_stores(self)
+            done, pending = journal.partition(units)
+            if self.verbose and done:
+                print(
+                    f"[session] resume: {len(done)}/{len(units)} units served "
+                    "from the journal"
+                )
+        fresh: list[UnitResult] = []
+        if pending:
+            run_name = name
+            if EXECUTORS[name].parallel and (workers <= 1 or len(pending) <= 1):
+                if workers > 1:
+                    warnings.warn(
+                        f"executor {name!r} degrades to serial: only "
+                        f"{len(pending)} pending unit(s) for {workers} workers"
+                    )
+                run_name = "serial"
+            plan = ExecutionPlan(
+                session=self,
+                units=pending,
+                max_workers=min(workers, len(pending)),
+                futures_pool=futures_pool,
+            )
+            fresh = run_units(run_name, plan)
+        cell_results, self._last_cell_walls = merge_unit_results(
+            cells, done + fresh
+        )
         results = MatrixResults()
         for cell in cell_results:
             results.add(cell)
@@ -523,52 +618,111 @@ class TuningSession:
         self.last_record = self.make_record(results, wall_s=time.time() - t0)
         return results
 
+    # -- the work-unit layer --------------------------------------------------
+    def journal_namespace(self) -> str | None:
+        """Binds unit-journal entries to everything that changes a unit's
+        numbers: the cache key plus a fingerprint of the FULL spec (searcher
+        kwargs, dataset seeds, design, root seed, dispatch, ...) minus the
+        storage fields — pointing the same experiment at a different store
+        must not orphan its journal, but changing anything that alters a
+        result must.  The unit key itself carries (algo, S, experiment
+        range, cell size).  ``None`` for specs with no stable fingerprint
+        (live callables stringify with memory addresses, which would orphan
+        the journal on every process restart)."""
+        d = dict(self._spec_dict_or_repr())
+        for k in ("store", "store_path"):
+            d.pop(k, None)
+        try:
+            fp = stable_seed(json.dumps(d, sort_keys=True))
+        except (TypeError, ValueError):
+            return None
+        return f"{self.cache_key}|{fp:08x}"
+
+    def unit_journal(self) -> UnitJournal | None:
+        # sessions with live in-process overrides are not spec-described, so
+        # a journal entry's validity could never be re-established on resume
+        if self.store is None or self._has_overrides:
+            return None
+        ns = self.journal_namespace()
+        if ns is None:
+            return None
+        return UnitJournal(self.store, ns)
+
     def run_cell(self, algo: str, sample_size: int, n_exp: int) -> CellResult:
-        """All experiments of one (algorithm, sample-size) cell.
+        """All experiments of one (algorithm, sample-size) cell — one
+        whole-cell unit through :meth:`run_unit`."""
+        unit = ExperimentUnit(
+            algo=algo, sample_size=sample_size, exp_lo=0, exp_hi=n_exp,
+            n_exp=n_exp,
+        )
+        r = self.run_unit(unit)
+        return CellResult(
+            algo=algo,
+            sample_size=sample_size,
+            final_values=r.final_values,
+            search_best_values=r.search_best_values,
+            n_samples_used=r.n_samples_used,
+        )
+
+    def run_unit(self, unit: ExperimentUnit) -> UnitResult:
+        """Experiments ``[unit.exp_lo, unit.exp_hi)`` of one cell.
 
         Experiment seeds derive from ``(spec.seed, algo, sample_size, e)``
-        alone, so any process can run any cell and get identical results.
+        with the GLOBAL experiment index ``e``, so any process can run any
+        unit — and any split of a cell into units — and get results
+        bit-identical to the monolithic per-cell loop.
         """
         spec = self.spec
+        t0 = time.perf_counter()
         dataset = self._get_dataset()
-        finals = np.empty(n_exp)
-        search_best = np.empty(n_exp)
-        n_used = np.empty(n_exp, dtype=np.int64)
+        n = unit.n_unit_exp
+        finals = np.empty(n)
+        search_best = np.empty(n)
+        n_used = np.empty(n, dtype=np.int64)
         rf_batch = (
-            self._rf_cell_batched(sample_size, n_exp)
-            if (dataset is not None and algo == "rf")
+            self._rf_unit_batched(unit)
+            if (dataset is not None and unit.algo == "rf")
             else None
         )
-        for e in range(n_exp):
-            exp_seed = stable_seed(spec.seed, algo, sample_size, e)
+        for i, e in enumerate(range(unit.exp_lo, unit.exp_hi)):
+            exp_seed = stable_seed(spec.seed, unit.algo, unit.sample_size, e)
             measurement = self.measurement = self._make_measurement(exp_seed)
             if rf_batch is not None:
-                tr = rf_batch[e]
-            elif dataset is not None and algo == "rs":
-                tr = self._rs_from_dataset(e, sample_size)
+                tr = rf_batch[i]
+            elif dataset is not None and unit.algo == "rs":
+                tr = self._rs_from_dataset(e, unit.sample_size)
             else:
                 # searcher_kwargs belong to the spec's named searcher; other
                 # algorithms on the matrix axis use their own defaults (SA
                 # would reject GA's pop_size, etc.)
-                kwargs = spec.searcher_kwargs if algo == spec.searcher else {}
-                searcher = make_searcher(algo, self.space, seed=exp_seed, **kwargs)
-                tr = searcher.run(measurement, sample_size, dispatch=spec.dispatch)
-            finals[e] = measurement.measure_final(
+                kwargs = (
+                    spec.searcher_kwargs if unit.algo == spec.searcher else {}
+                )
+                searcher = make_searcher(
+                    unit.algo, self.space, seed=exp_seed, **kwargs
+                )
+                tr = searcher.run(
+                    measurement, unit.sample_size, dispatch=spec.dispatch
+                )
+            finals[i] = measurement.measure_final(
                 tr.best_config, spec.design.final_repeats
             )
-            search_best[e] = tr.best_value
-            n_used[e] = tr.n_samples
+            search_best[i] = tr.best_value
+            n_used[i] = tr.n_samples
+        wall = time.perf_counter() - t0
         if self.verbose:
             print(
-                f"[session] {algo:7s} S={sample_size:4d} E={n_exp:4d} "
-                f"median={np.median(finals):.6g} best={finals.min():.6g}"
+                f"[session] {unit.algo:7s} S={unit.sample_size:4d} "
+                f"e[{unit.exp_lo}:{unit.exp_hi})/{unit.n_exp:4d} "
+                f"median={np.median(finals):.6g} best={finals.min():.6g} "
+                f"wall={wall:.2f}s"
             )
-        return CellResult(
-            algo=algo,
-            sample_size=sample_size,
+        return UnitResult(
+            unit=unit,
             final_values=finals,
             search_best_values=search_best,
             n_samples_used=n_used,
+            wall_s=wall,
         )
 
     # -- dataset-served paths (paper section VI.B) ---------------------------
@@ -585,33 +739,49 @@ class TuningSession:
             n_samples=budget,
         )
 
-    def _rf_cell_batched(
-        self, sample_size: int, n_exp: int, rf_pool: int = 2048
-    ) -> list[TuningResult]:
-        """All RF experiments of one sample-size cell, fit in ONE vectorized
-        histogram-forest pass (see surrogates/forest_batched.py).  Semantics
-        per experiment match the paper: train on a disjoint S-10 dataset
-        chunk, measure the model's top-10 predictions over a candidate pool,
-        keep the best prediction."""
+    def _rf_unit_batched(self, unit: ExperimentUnit, rf_pool: int = 2048
+                         ) -> list[TuningResult]:
+        """The unit's RF experiments, fit in ONE vectorized histogram-forest
+        pass (see surrogates/forest_batched.py).  Semantics per experiment
+        match the paper: train on a disjoint S-10 dataset chunk, measure the
+        model's top-10 predictions over a candidate pool, keep the best
+        prediction.
+
+        Bootstrap draws come from the FULL cell's stream (one
+        ``(E_total * trees, n_train)`` draw from ``spec.seed``), sliced to
+        this unit's rows — experiment ``e`` resamples identically however
+        the cell is split, so within-cell RF units stay bit-identical to
+        the monolithic cell fit.
+        """
         spec = self.spec
         dataset = self._get_dataset()
+        sample_size = unit.sample_size
         top_k = min(10, max(1, sample_size // 2))
         n_train = sample_size - top_k
-        chunks = [dataset.chunk(e, n_train) for e in range(n_exp)]
+        chunks = [dataset.chunk(e, n_train) for e in range(unit.exp_lo, unit.exp_hi)]
         Xc = np.stack([c[0] for c in chunks])
         yc = np.stack([c[1] for c in chunks])
-        forest = BatchedForest(
-            self.space.cardinalities, n_estimators=100, seed=spec.seed
+        n_trees = 100
+        # bounded `integers` draws consume the stream sequentially in fill
+        # order with data-dependent rejection, so rows can be skipped only
+        # by generating everything before them (bit_generator.advance would
+        # desync); the prefix up to exp_hi suffices, and the paper design's
+        # worst cell is ~20k x 100 draws (~16 MB) — cheap either way
+        boot = np.random.default_rng(spec.seed).integers(
+            0, n_train, size=(unit.exp_hi * n_trees, n_train)
         )
-        forest.fit(Xc, yc)
+        forest = BatchedForest(
+            self.space.cardinalities, n_estimators=n_trees, seed=spec.seed
+        )
+        forest.fit(Xc, yc, bootstrap_idx=boot[unit.exp_lo * n_trees :])
         pool_rng = np.random.default_rng(spec.seed + 7)
         pool = self.space.sample_indices(pool_rng, rf_pool)
-        preds = forest.predict(pool)                    # (E, P)
+        preds = forest.predict(pool)                    # (unit E, P)
         results = []
-        for e in range(n_exp):
+        for i, e in enumerate(range(unit.exp_lo, unit.exp_hi)):
             exp_seed = stable_seed(spec.seed, "rf", sample_size, e)
             measurement = self._make_measurement(exp_seed)
-            best = np.argsort(preds[e], kind="stable")[:top_k]
+            best = np.argsort(preds[i], kind="stable")[:top_k]
             run_vals = measurement.measure_batch(self.space.decode_batch(pool[best]))
             j = int(np.argmin(run_vals))
             results.append(
@@ -619,90 +789,12 @@ class TuningSession:
                     algo="rf",
                     best_config=self.space.decode(pool[best][j]),
                     best_value=float(run_vals[j]),
-                    history_values=list(yc[e]) + list(run_vals),
+                    history_values=list(yc[i]) + list(run_vals),
                     history_configs=[],
                     n_samples=sample_size,
                 )
             )
         return results
-
-    # -- sharded fan-out ------------------------------------------------------
-    def _shard_store_path(self, shard: int) -> str | None:
-        if self.spec.store is None or self._store_path is None:
-            return None
-        return f"{self._store_path}.shard{shard}"
-
-    def _run_sharded(self, cells, shards: int) -> list[CellResult]:
-        import multiprocessing
-
-        if self._has_overrides:
-            raise RuntimeError(
-                "sharded matrix runs rebuild the session from the serialized "
-                "spec in worker processes; in-process overrides (space/"
-                "measurement_factory/dataset/store objects) cannot be shipped"
-            )
-        if not self._backend.serializable:
-            raise RuntimeError(
-                f"backend {self.spec.backend!r} holds in-process callables and "
-                "cannot be rebuilt in shard workers; use a name-resolvable "
-                "backend (e.g. 'costmodel') for sharded runs"
-            )
-        spec_dict = self.spec.to_dict()  # raises early if not serializable
-        # generate the shared dataset ONCE in the parent and ship it to the
-        # workers, so N shards don't redo the 20k-sample generation (and the
-        # run record keeps dataset_best)
-        dataset = self._get_dataset()
-        dataset_payload = (
-            None if dataset is None else (dataset.indices, dataset.values)
-        )
-        shards = min(shards, len(cells))
-        parts = [cells[k::shards] for k in range(shards)]
-        # a warm parent store is shipped (by path) to every worker: shard
-        # stores start as copies, so previously-measured entries are served
-        # as hits — a second sharded run performs zero re-measurements and
-        # the merged store comes back bit-identical
-        base_store_path = (
-            self._store_path
-            if self.spec.store is not None
-            and self._store_path is not None
-            and os.path.exists(self._store_path)
-            else None
-        )
-        payloads = [
-            {
-                "spec": spec_dict,
-                "cells": parts[k],
-                "store_path": self._shard_store_path(k),
-                "base_store_path": base_store_path,
-                "dataset": dataset_payload,
-            }
-            for k in range(shards)
-        ]
-        ctx = multiprocessing.get_context("spawn")
-        with ctx.Pool(processes=shards) as pool:
-            shard_results = pool.map(_shard_worker, payloads)
-        self._merge_shard_stores(shards)
-        by_key = {}
-        for part, res in zip(parts, shard_results):
-            for (algo, s, _), cell in zip(part, res):
-                by_key[(algo, s)] = cell
-        return [by_key[(algo, s)] for algo, s, _ in cells]
-
-    def _merge_shard_stores(self, shards: int) -> None:
-        if self.store is None:
-            return
-        for k in range(shards):
-            path = self._shard_store_path(k)
-            if path is None or not os.path.exists(path):
-                continue
-            shard_store = make_store(self.spec.store, path)
-            self.store.update(shard_store.items())
-            if hasattr(shard_store, "meta_items"):
-                self.store.update_meta(shard_store.meta_items())
-            if hasattr(shard_store, "close"):
-                shard_store.close()
-            os.remove(path)
-        self.store.save()
 
     # -- records --------------------------------------------------------------
     def _spec_dict_or_repr(self) -> dict:
@@ -747,41 +839,24 @@ class TuningSession:
         dataset = self._dataset
         if dataset is not None:
             result["dataset_best"] = float(dataset.optimum)
+        extra_out = {**self._backend_extra(self.measurement), **dict(extra or {})}
+        if self._last_cell_walls:
+            # per-cell search cost (sum of unit wall-clocks, parallel or
+            # not), recorded by the work-unit layer; the figure layer plots
+            # it alongside result quality (figures.search_cost)
+            extra_out["cell_wall_s"] = [
+                {"algo": algo, "sample_size": s, "wall_s": round(w, 3)}
+                for (algo, s), w in sorted(self._last_cell_walls.items())
+            ]
         return RunRecord(
             kind="tune_matrix",
             spec=self._spec_dict_or_repr(),
             result=result,
             provenance=_provenance(wall_s),
-            # backend provenance from the last in-process cell measurement
-            # (sharded parents hold none — workers own the measurements)
-            extra={**self._backend_extra(self.measurement), **dict(extra or {})},
+            # backend provenance from the last in-process unit measurement
+            # (parallel-run parents hold none — workers own the measurements)
+            extra=extra_out,
         )
-
-
-def _shard_worker(payload: dict) -> list[CellResult]:
-    """Runs one shard's cells in a worker process (spawned; rebuilds the
-    session from the serialized spec; the parent ships the pre-generated
-    sample dataset so workers never regenerate it)."""
-    spec = TuningSpec.from_dict(payload["spec"])
-    session = TuningSession(spec, store_path=payload["store_path"])
-    base_path = payload.get("base_store_path")
-    if base_path is not None and session.store is not None and os.path.exists(base_path):
-        # seed the shard store from the parent's warm store: hits are served
-        # without re-measuring (or recompiling, for the pallas backend)
-        base = make_store(spec.store, base_path)
-        session.store.update(base.items())
-        if hasattr(base, "meta_items"):
-            session.store.update_meta(base.meta_items())
-        if hasattr(base, "close"):
-            base.close()
-    if payload.get("dataset") is not None:
-        indices, values = payload["dataset"]
-        session._dataset = SampleDataset(
-            space=session.space, indices=indices, values=values
-        )
-    out = [session.run_cell(algo, s, e) for algo, s, e in payload["cells"]]
-    session.save_store()
-    return out
 
 
 # -------------------------------------------------------------------- facade
@@ -807,21 +882,39 @@ def tune_matrix(
     spec: TuningSpec,
     *,
     shards: int = 1,
+    executor: str | None = None,
+    max_workers: int | None = None,
+    resume: bool = False,
+    unit_experiments: int | None = None,
+    futures_pool=None,
     out_dir: str | None = None,
     verbose: bool = False,
     extra: dict | None = None,
 ) -> MatrixResults:
     """Run the (algorithms x design) experiment matrix described by ``spec``.
 
-    ``shards=N`` fans cells out across N worker processes; per-cell seeds
-    derive from the spec, so sharded and single-process runs are
-    bit-identical.  When ``out_dir`` is given, the full results land in
+    The matrix decomposes into serializable work units run through the
+    ``EXECUTORS`` registry: ``executor="process", max_workers=N`` fans units
+    (including within-cell splits of big-E rows) across N spawned workers;
+    ``executor="futures"`` submits the same payloads to any
+    ``concurrent.futures.Executor`` (``futures_pool=...``).  ``shards=N``
+    is the legacy spelling of the process executor.  Experiment seeds
+    derive from the spec, so every executor is bit-identical to the serial
+    loop.  ``resume=True`` skips units already journaled in the measurement
+    store.  When ``out_dir`` is given, the full results land in
     ``<cache_key>.npz`` with a versioned :class:`RunRecord` JSON (including
     the backend's true optimum, when it can compute one) next to it.
     """
     session = TuningSession(spec, verbose=verbose)
     t0 = time.time()
-    results = session.run_matrix(shards=shards)
+    results = session.run_matrix(
+        shards=shards,
+        executor=executor,
+        max_workers=max_workers,
+        resume=resume,
+        unit_experiments=unit_experiments,
+        futures_pool=futures_pool,
+    )
     if out_dir is not None:
         name = (spec.cache_key or spec.default_cache_key()).replace("/", "_")
         os.makedirs(out_dir, exist_ok=True)

@@ -143,8 +143,10 @@ class MeasurementStore:
         self._meta[key] = str(note)
         self._dirty += 1
 
-    def meta_items(self):
-        return self._meta.items()
+    def meta_items(self, prefix: str | None = None):
+        if prefix is None:
+            return self._meta.items()
+        return [(k, v) for k, v in self._meta.items() if k.startswith(prefix)]
 
     def update_meta(self, entries) -> None:
         for k, v in entries:
@@ -165,7 +167,10 @@ class MeasurementStore:
         fd, tmp = tempfile.mkstemp(dir=d or ".", suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:
-                json.dump(payload, f)
+                # sorted keys: two stores holding the same entries produce
+                # byte-identical files regardless of insertion order (the
+                # executor-equivalence guarantee is checkable on bytes)
+                json.dump(payload, f, sort_keys=True)
             os.replace(tmp, self.path)
         except BaseException:
             if os.path.exists(tmp):

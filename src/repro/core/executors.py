@@ -1,0 +1,312 @@
+"""Executor registry: pluggable strategies for running experiment units.
+
+Mirrors ``SEARCHERS`` / ``BACKENDS`` / ``STORES``: an executor is resolved by
+name and runs a list of :class:`~repro.core.workunits.ExperimentUnit`\\ s for
+a session, returning :class:`~repro.core.workunits.UnitResult` fragments the
+session merges deterministically by unit key.  Built-ins:
+
+* ``"serial"``  — the in-process loop; journals each completed unit.
+* ``"process"`` — ``multiprocessing`` (spawn) fan-out: units are grouped
+  round-robin across ``max_workers`` workers, each worker rebuilds the
+  session from the serialized spec, writes to its own ``store_path.shard<k>``
+  (seeded from the warm parent store), journals into it, and the parent
+  merges shard stores when the pool joins.
+* ``"futures"`` — the same worker payload submitted to ANY
+  ``concurrent.futures.Executor``.  Pass a live pool via
+  ``run_matrix(futures_pool=...)`` (a ``ThreadPoolExecutor``, a cluster
+  client's pool adapter, ...); without one a spawn-context
+  ``ProcessPoolExecutor`` is created for the call.  This is the
+  remote-executor seam: the payload is ``(spec_dict, unit dicts,
+  store paths)`` and the results come back as plain JSON-able dicts, so an
+  executor whose workers live on other hosts only needs to ship the payload
+  and a store path visible to the worker.
+
+Worker crash/kill recovery: because workers journal completed units into
+their shard stores as they go, :func:`recover_shard_stores` can absorb
+leftover ``*.shard<k>`` files from a killed run into the parent store before
+a resumed run partitions its units — nothing a dead worker finished is lost.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from .stores import make_store
+from .workunits import ExperimentUnit, UnitResult
+
+__all__ = [
+    "EXECUTORS",
+    "ExecutionPlan",
+    "Executor",
+    "recover_shard_stores",
+    "register_executor",
+    "run_units",
+]
+
+
+@dataclass
+class ExecutionPlan:
+    """Everything an executor needs for one fan-out."""
+
+    session: Any                      # TuningSession (duck-typed; no import cycle)
+    units: list[ExperimentUnit] = field(default_factory=list)
+    max_workers: int = 1
+    futures_pool: Any = None          # concurrent.futures.Executor, "futures" only
+
+
+@dataclass(frozen=True)
+class Executor:
+    """A named unit-execution strategy.
+
+    ``parallel`` marks executors that ship work out of the calling process:
+    they require a fully serializable spec (no in-process overrides, a
+    name-resolvable backend) and degrade to ``serial`` — with a warning —
+    when the plan cannot keep more than one worker busy.
+    """
+
+    name: str
+    run: Callable[[ExecutionPlan], list[UnitResult]]
+    parallel: bool = True
+
+
+EXECUTORS: dict[str, Executor] = {}
+
+
+def register_executor(executor: Executor) -> Executor:
+    EXECUTORS[executor.name] = executor
+    return executor
+
+
+def run_units(name: str, plan: ExecutionPlan) -> list[UnitResult]:
+    """Run ``plan`` through the named executor."""
+    if name not in EXECUTORS:
+        raise KeyError(f"unknown executor {name!r}; have {sorted(EXECUTORS)}")
+    return EXECUTORS[name].run(plan)
+
+
+# -------------------------------------------------------------------- serial
+
+
+def _run_serial(plan: ExecutionPlan) -> list[UnitResult]:
+    session = plan.session
+    journal = session.unit_journal()
+    out = []
+    for unit in plan.units:
+        result = session.run_unit(unit)
+        if journal is not None:
+            journal.put(result)   # flushed (throttled) — a kill loses little
+        out.append(result)
+    return out
+
+
+register_executor(Executor(name="serial", run=_run_serial, parallel=False))
+
+
+# ----------------------------------------------------- shard-store plumbing
+
+
+def _shard_store_path(session, shard: int) -> str | None:
+    if session.spec.store is None or session._store_path is None:
+        return None
+    return f"{session._store_path}.shard{shard}"
+
+
+def absorb_store(dst, kind: str, path: str) -> None:
+    """Copy one store file's values AND metadata (which carries the unit
+    journal) into ``dst``."""
+    src = make_store(kind, path)
+    dst.update(src.items())
+    if hasattr(src, "meta_items"):
+        dst.update_meta(src.meta_items())
+    if hasattr(src, "close"):
+        src.close()
+
+
+def merge_shard_stores(session, paths: list[str]) -> None:
+    """Fold worker shard stores into the session's main store, then delete
+    the shard files."""
+    if session.store is None:
+        return
+    for path in paths:
+        if path is None or not os.path.exists(path):
+            continue
+        absorb_store(session.store, session.spec.store, path)
+        os.remove(path)
+    session.store.save()
+
+
+def recover_shard_stores(session) -> int:
+    """Absorb shard stores left behind by a killed parallel run.
+
+    Workers journal completed units into their shard stores incrementally,
+    so even though the dead parent never merged them, their measurements and
+    journal entries are intact on disk.  Returns how many files were
+    recovered.
+    """
+    base = session._store_path
+    if session.store is None or base is None:
+        return 0
+    pattern = re.compile(re.escape(os.path.basename(base)) + r"\.shard\d+$")
+    d = os.path.dirname(base) or "."
+    if not os.path.isdir(d):
+        return 0
+    leftovers = sorted(
+        os.path.join(d, f) for f in os.listdir(d) if pattern.fullmatch(f)
+    )
+    merge_shard_stores(session, leftovers)
+    return len(leftovers)
+
+
+# ----------------------------------------------------------- worker payloads
+
+
+def _check_shippable(session) -> dict:
+    """Validate that the session can be rebuilt in a worker; return the
+    serialized spec.  Raises the same errors for every parallel executor."""
+    if session._has_overrides:
+        raise RuntimeError(
+            "parallel matrix runs rebuild the session from the serialized "
+            "spec in worker processes; in-process overrides (space/"
+            "measurement_factory/dataset/store objects) cannot be shipped"
+        )
+    if not session._backend.serializable:
+        raise RuntimeError(
+            f"backend {session.spec.backend!r} holds in-process callables and "
+            "cannot be rebuilt in shard workers; use a name-resolvable "
+            "backend (e.g. 'costmodel') for parallel runs"
+        )
+    return session.spec.to_dict()  # raises early if not serializable
+
+
+def _make_payloads(
+    plan: ExecutionPlan, spec_dict: dict
+) -> list[dict]:
+    """Group units round-robin into at most ``max_workers`` payloads.
+
+    The payload is the remote-executor seam: ``spec`` / ``units`` /
+    ``store_path`` are plain JSON; ``dataset`` ships the parent's
+    pre-generated sample arrays so N workers never redo the 20k-sample
+    generation (remote workers that cannot receive arrays should use
+    ``TuningSpec.dataset_cache`` on a shared path instead).
+    """
+    session = plan.session
+    n = max(1, min(plan.max_workers, len(plan.units)))
+    groups = [plan.units[k::n] for k in range(n)]
+    dataset = session._get_dataset()
+    dataset_payload = (
+        None if dataset is None else (dataset.indices, dataset.values)
+    )
+    # a warm parent store is shipped (by path) to every worker: shard stores
+    # start as copies, so previously-measured entries are served as hits — a
+    # second parallel run performs zero re-measurements and the merged store
+    # comes back bit-identical
+    base_store_path = (
+        session._store_path
+        if session.spec.store is not None
+        and session._store_path is not None
+        and os.path.exists(session._store_path)
+        else None
+    )
+    return [
+        {
+            "spec": spec_dict,
+            "units": [u.to_dict() for u in groups[k]],
+            "store_path": _shard_store_path(session, k),
+            "base_store_path": base_store_path,
+            "dataset": dataset_payload,
+        }
+        for k in range(n)
+    ]
+
+
+def _unit_worker(payload: dict) -> list[dict]:
+    """Runs one payload's units in a worker (any process, any host with the
+    package importable and the store paths reachable).  Rebuilds the session
+    from the serialized spec, journals each completed unit into the shard
+    store, and returns JSON-able :class:`UnitResult` dicts."""
+    from .api import TuningSession, TuningSpec  # lazy: avoid an import cycle
+    from .dataset import SampleDataset
+
+    spec = TuningSpec.from_dict(payload["spec"])
+    session = TuningSession(spec, store_path=payload["store_path"])
+    base_path = payload.get("base_store_path")
+    if (
+        base_path is not None
+        and session.store is not None
+        and os.path.exists(base_path)
+    ):
+        # seed the shard store from the parent's warm store: hits are served
+        # without re-measuring (or recompiling, for the pallas backend)
+        absorb_store(session.store, spec.store, base_path)
+    if payload.get("dataset") is not None:
+        indices, values = payload["dataset"]
+        session._dataset = SampleDataset(
+            space=session.space, indices=indices, values=values
+        )
+    journal = session.unit_journal()
+    out = []
+    for d in payload["units"]:
+        result = session.run_unit(ExperimentUnit.from_dict(d))
+        if journal is not None:
+            journal.put(result)
+        out.append(result.to_dict())
+    session.save_store()
+    return out
+
+
+def _collect(plan: ExecutionPlan, payloads: list[dict],
+             worker_results: list[list[dict]]) -> list[UnitResult]:
+    merge_shard_stores(
+        plan.session, [p["store_path"] for p in payloads]
+    )
+    return [
+        UnitResult.from_dict(d) for results in worker_results for d in results
+    ]
+
+
+# ------------------------------------------------------------------- process
+
+
+def _run_process(plan: ExecutionPlan) -> list[UnitResult]:
+    import multiprocessing
+
+    spec_dict = _check_shippable(plan.session)
+    payloads = _make_payloads(plan, spec_dict)
+    ctx = multiprocessing.get_context("spawn")
+    with ctx.Pool(processes=len(payloads)) as pool:
+        worker_results = pool.map(_unit_worker, payloads)
+    return _collect(plan, payloads, worker_results)
+
+
+register_executor(Executor(name="process", run=_run_process, parallel=True))
+
+
+# ------------------------------------------------------------------- futures
+
+
+def _run_futures(plan: ExecutionPlan) -> list[UnitResult]:
+    spec_dict = _check_shippable(plan.session)
+    payloads = _make_payloads(plan, spec_dict)
+    pool = plan.futures_pool
+    owned = pool is None
+    if owned:
+        import concurrent.futures
+        import multiprocessing
+
+        pool = concurrent.futures.ProcessPoolExecutor(
+            max_workers=len(payloads),
+            mp_context=multiprocessing.get_context("spawn"),
+        )
+    try:
+        futures = [pool.submit(_unit_worker, p) for p in payloads]
+        worker_results = [f.result() for f in futures]
+    finally:
+        if owned:
+            pool.shutdown()
+    return _collect(plan, payloads, worker_results)
+
+
+register_executor(Executor(name="futures", run=_run_futures, parallel=True))

@@ -1,21 +1,20 @@
-"""Matrix result containers + the deprecated :class:`MatrixRunner` shim.
+"""Matrix result containers: :class:`CellResult` / :class:`MatrixResults`.
 
-The matrix driver itself lives in :mod:`repro.core.api` now: a
+The matrix driver itself lives in :mod:`repro.core.api`: a
 :class:`~repro.core.api.TuningSession` built from a declarative
 :class:`~repro.core.api.TuningSpec` owns the (algorithm x sample-size x
-experiment) loop, the dataset-served non-SMBO paths, the persistent
-measurement store, and the multiprocess ``shards=N`` fan-out.  This module
-keeps the result dataclasses (:class:`CellResult`, :class:`MatrixResults`),
-the :func:`stable_seed` helper every layer derives experiment seeds from,
-and ``MatrixRunner`` — a thin deprecated facade over the session for callers
-that hold live space/measurement objects.
+experiment) loop, decomposed into work units (:mod:`repro.core.workunits`)
+run through the executor registry (:mod:`repro.core.executors`).  This
+module keeps the result dataclasses and the :func:`stable_seed` helper every
+layer derives experiment seeds from.  (The deprecated ``MatrixRunner`` shim
+that used to live here is gone — construct a :class:`TuningSession` with
+keyword overrides for in-process space/measurement/dataset objects.)
 """
 
 from __future__ import annotations
 
 import json
 import os
-import warnings
 import zlib
 from dataclasses import dataclass, field
 
@@ -26,13 +25,6 @@ def stable_seed(*parts) -> int:
     """Deterministic 31-bit seed from arbitrary parts (python's ``hash`` is
     process-salted and would break run-to-run reproducibility)."""
     return zlib.crc32("|".join(map(str, parts)).encode()) & 0x7FFFFFFF
-
-
-from .dataset import SampleDataset
-from .engine import DISPATCH_MODES, MeasurementStore
-from .experiment import ExperimentDesign
-from .searchers import SEARCHERS
-from .space import SearchSpace
 
 
 @dataclass
@@ -90,63 +82,3 @@ class MatrixResults:
                 n_samples_used=data[f"nsamp_{i}"],
             )
         return out
-
-
-class MatrixRunner:
-    """Deprecated shim: delegates to :class:`repro.core.api.TuningSession`.
-
-    Prefer the declarative facade::
-
-        repro.tune_matrix(TuningSpec(kernel=..., algorithms=..., design=...))
-
-    This class remains for callers that hold live objects (a constructed
-    space, a measurement factory closure, a pre-generated dataset); it wires
-    them into a session as in-process overrides.  Such sessions cannot be
-    sharded — use a fully spec-described ``tune_matrix`` for that.
-    """
-
-    def __init__(
-        self,
-        space: SearchSpace,
-        measurement_factory,           # (seed: int) -> BaseMeasurement
-        design: ExperimentDesign,
-        dataset: SampleDataset | None = None,
-        algorithms: tuple[str, ...] = ("rs", "rf", "ga", "bo_gp", "bo_tpe"),
-        seed: int = 0,
-        verbose: bool = False,
-        dispatch: str = "batch",
-        store: MeasurementStore | None = None,
-        cache_key: str = "",
-    ):
-        warnings.warn(
-            "MatrixRunner is deprecated; use repro.tune_matrix(TuningSpec(...))",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        unknown = [a for a in algorithms if a not in SEARCHERS]
-        if unknown:
-            raise KeyError(f"unknown algorithms {unknown}")
-        if dispatch not in DISPATCH_MODES:
-            raise ValueError(f"dispatch must be one of {DISPATCH_MODES}")
-        from .api import TuningSession, TuningSpec  # runner must not import api at module level
-
-        spec = TuningSpec(
-            kernel=cache_key or "objective",
-            searcher=algorithms[0],
-            algorithms=tuple(algorithms),
-            design=design,
-            seed=seed,
-            dispatch=dispatch,
-            cache_key=cache_key or "objective",
-        )
-        self.session = TuningSession(
-            spec,
-            space=space,
-            measurement_factory=measurement_factory,
-            dataset=dataset,
-            store=store,
-            verbose=verbose,
-        )
-
-    def run(self) -> MatrixResults:
-        return self.session.run_matrix()

@@ -5,8 +5,9 @@ its whole file per flush — fine at the scaled designs' ~10^5 entries, but the
 paper-exact ~3M-sample design needs incremental writes.  The sqlite backend
 here keeps the same duck-typed interface (``get`` / ``put`` / ``save`` /
 ``items`` / ``update`` / ``__len__``) over a single-table database with
-batched commits, so :class:`~repro.core.engine.DiskCachedMeasurement` and the
-sharded matrix driver work unchanged against either.
+batched commits, so :class:`~repro.core.engine.DiskCachedMeasurement`, the
+executor layer's shard-store merge, and the work-unit journal (which lives
+in the per-key metadata side-channel) work unchanged against either.
 
 Select a backend by name through :func:`make_store` (``TuningSpec.store``
 routes here): ``make_store("sqlite", path)`` / ``make_store("json", path)``.
@@ -105,8 +106,16 @@ class SqliteMeasurementStore:
         if self.autosave_every and self._dirty >= self.autosave_every:
             self.save()
 
-    def meta_items(self) -> Iterator[tuple[str, str]]:
-        for key, note in self._conn.execute("SELECT key, note FROM meta"):
+    def meta_items(self, prefix: str | None = None) -> Iterator[tuple[str, str]]:
+        if prefix is None:
+            rows = self._conn.execute("SELECT key, note FROM meta")
+        else:
+            like = prefix.replace("\\", "\\\\").replace("%", "\\%").replace("_", "\\_")
+            rows = self._conn.execute(
+                "SELECT key, note FROM meta WHERE key LIKE ? ESCAPE '\\'",
+                (like + "%",),
+            )
+        for key, note in rows:
             yield key, str(note)
 
     def update_meta(self, entries: Iterable[tuple[str, str]]) -> None:

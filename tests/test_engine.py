@@ -9,9 +9,10 @@ from repro.core import (
     DiskCachedMeasurement,
     EXTRA_ALGORITHMS,
     ExperimentDesign,
-    MatrixRunner,
     MeasurementStore,
     PAPER_ALGORITHMS,
+    TuningSession,
+    TuningSpec,
     config_key,
     drive,
     make_searcher,
@@ -239,26 +240,22 @@ def test_reset_clears_dispatch_counter(space):
     assert m.n_dispatches == 0 and m.n_samples == 0
 
 
-# -------------------------------------------------- matrix runner parity
+# -------------------------------------------------- matrix session parity
 
 
-def test_runner_dispatch_parity_per_cell():
+def test_session_dispatch_parity_per_cell():
     """The full matrix smoke run: batched and sequential dispatch agree on
     per-cell n_samples_used (and, noise being dispatch-invariant, finals)."""
-    w, chip = WORKLOADS["harris"], CHIPS["v5e"]
-    from repro.costmodel import executable_space
-
-    space = executable_space(w, chip)
 
     def run(dispatch):
-        runner = MatrixRunner(
-            space,
-            lambda s: CostModelMeasurement(w, chip, seed=s),
-            ExperimentDesign(sample_sizes=(25,), n_experiments=(3,)),
+        spec = TuningSpec(
+            kernel="harris",
+            backend_kwargs={"chip": "v5e"},
             algorithms=("rs", "ga", "bo_tpe"),
+            design=ExperimentDesign(sample_sizes=(25,), n_experiments=(3,)),
             dispatch=dispatch,
         )
-        return runner.run()
+        return TuningSession(spec).run_matrix()
 
     rb, ro = run("batch"), run("one")
     for key in rb.cells:
@@ -270,11 +267,11 @@ def test_runner_dispatch_parity_per_cell():
         )
 
 
-def test_runner_with_store_never_remeasures(tmp_path):
+def test_session_with_store_never_remeasures(tmp_path):
+    """In-process overrides (live measurement factory + store object) still
+    run through the session's serial executor; a warm store serves the
+    second run entirely from disk."""
     w, chip = WORKLOADS["add"], CHIPS["v5e"]
-    from repro.costmodel import executable_space
-
-    space = executable_space(w, chip)
     path = str(tmp_path / "matrix_cache.json")
 
     counters = []
@@ -285,14 +282,16 @@ def test_runner_with_store_never_remeasures(tmp_path):
         return m
 
     def run():
-        return MatrixRunner(
-            space,
-            factory,
-            ExperimentDesign(sample_sizes=(25,), n_experiments=(2,)),
+        spec = TuningSpec(
+            kernel="add",
+            backend_kwargs={"chip": "v5e"},
             algorithms=("rs", "ga"),
-            store=MeasurementStore(path),
+            design=ExperimentDesign(sample_sizes=(25,), n_experiments=(2,)),
             cache_key="add/v5e",
-        ).run()
+        )
+        return TuningSession(
+            spec, measurement_factory=factory, store=MeasurementStore(path)
+        ).run_matrix()
 
     r1 = run()
     first_inner = sum(m.n_samples for m in counters)

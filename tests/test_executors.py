@@ -1,0 +1,377 @@
+"""Work-unit executor layer: decomposition, executor equivalence (serial ≡
+process ≡ futures ≡ legacy shards=N, bit-identical), within-cell splits of
+big-E rows, journal-based kill-and-resume, and degrade warnings."""
+
+import json
+import os
+import shutil
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core import (
+    EXECUTORS,
+    ExperimentDesign,
+    ExperimentUnit,
+    MeasurementStore,
+    TuningSession,
+    TuningSpec,
+    UnitResult,
+    build_units,
+    merge_unit_results,
+)
+from repro.core.executors import ExecutionPlan, run_units
+
+SMOKE = dict(kernel="harris", backend_kwargs={"chip": "v5e"})
+
+SPEC = TuningSpec(
+    **SMOKE,
+    algorithms=("rs", "rf", "ga"),
+    design=ExperimentDesign(sample_sizes=(25,), n_experiments=(4,), final_repeats=3),
+    seed=11,
+    dataset_size=200,
+)
+
+
+def unit(algo="ga", s=25, lo=0, hi=4, e=4):
+    return ExperimentUnit(algo=algo, sample_size=s, exp_lo=lo, exp_hi=hi, n_exp=e)
+
+
+def assert_same_cells(a, b):
+    assert set(a.cells) == set(b.cells)
+    for key in a.cells:
+        np.testing.assert_array_equal(
+            a.cells[key].final_values, b.cells[key].final_values
+        )
+        np.testing.assert_array_equal(
+            a.cells[key].search_best_values, b.cells[key].search_best_values
+        )
+        np.testing.assert_array_equal(
+            a.cells[key].n_samples_used, b.cells[key].n_samples_used
+        )
+
+
+def store_values_bytes(path: str) -> bytes:
+    """Canonical bytes of a JSON store's measurement VALUES (journal entries
+    in the metadata side-channel carry wall-clocks, which legitimately vary
+    run to run)."""
+    return json.dumps(
+        sorted(MeasurementStore(path).items()), sort_keys=True
+    ).encode()
+
+
+# ------------------------------------------------------------- decomposition
+
+
+def test_build_units_one_per_cell_by_default():
+    cells = [("rs", 25, 8), ("ga", 50, 4)]
+    units = build_units(cells)
+    assert [u.key for u in units] == ["rs/S25/E8/e0:8", "ga/S50/E4/e0:4"]
+
+
+def test_build_units_splits_largest_until_min_units():
+    units = build_units([("ga", 25, 8)], min_units=4)
+    assert [(u.exp_lo, u.exp_hi) for u in units] == [(0, 2), (2, 4), (4, 6), (6, 8)]
+    assert all(u.n_exp == 8 for u in units)
+    # more workers than experiments: stops at one experiment per unit
+    units = build_units([("ga", 25, 2)], min_units=16)
+    assert len(units) == 2
+
+
+def test_build_units_caps_unit_experiments():
+    units = build_units([("rs", 25, 5)], max_unit_experiments=2)
+    assert [(u.exp_lo, u.exp_hi) for u in units] == [(0, 2), (2, 4), (4, 5)]
+
+
+def test_unit_validation_and_roundtrip():
+    with pytest.raises(ValueError, match="invalid experiment range"):
+        ExperimentUnit(algo="ga", sample_size=25, exp_lo=3, exp_hi=3, n_exp=4)
+    u = unit(lo=1, hi=3)
+    assert ExperimentUnit.from_dict(u.to_dict()) == u
+    r = UnitResult(
+        unit=u,
+        final_values=np.array([1.0, 2.0]),
+        search_best_values=np.array([1.5, 2.5]),
+        n_samples_used=np.array([25, 25]),
+        wall_s=0.5,
+    )
+    again = UnitResult.from_dict(json.loads(json.dumps(r.to_dict())))
+    np.testing.assert_array_equal(again.final_values, r.final_values)
+    assert again.unit == u
+
+
+def test_merge_detects_gaps_and_duplicates():
+    cells = [("ga", 25, 4)]
+    a = UnitResult(unit=unit(lo=0, hi=2), final_values=np.ones(2),
+                   search_best_values=np.ones(2), n_samples_used=np.ones(2))
+    b = UnitResult(unit=unit(lo=2, hi=4), final_values=np.ones(2),
+                   search_best_values=np.ones(2), n_samples_used=np.ones(2))
+    merged, walls = merge_unit_results(cells, [b, a])   # order-insensitive
+    assert len(merged) == 1 and len(merged[0].final_values) == 4
+    assert walls[("ga", 25)] == a.wall_s + b.wall_s
+    with pytest.raises(ValueError, match="duplicate unit"):
+        merge_unit_results(cells, [a, a, b])
+    with pytest.raises(ValueError, match="coverage gap|covered only"):
+        merge_unit_results(cells, [a])
+
+
+def test_executor_registry():
+    assert {"serial", "process", "futures"} <= set(EXECUTORS)
+    assert repro.EXECUTORS is EXECUTORS
+    with pytest.raises(KeyError, match="unknown executor"):
+        run_units("warp", ExecutionPlan(session=None))
+    with pytest.raises(KeyError, match="unknown executor"):
+        TuningSession(SPEC).run_matrix(executor="warp")
+
+
+# ------------------------------------------------------- executor equivalence
+
+
+def test_all_executors_bit_identical(tmp_path):
+    """serial ≡ legacy shards=N ≡ process ≡ futures: identical CellResults,
+    identical RunRecord cell summaries, byte-identical merged store values —
+    including within-cell splits of the rf/rs dataset-served paths."""
+    runs = {
+        "serial": dict(),
+        "legacy": dict(shards=2),
+        "process": dict(executor="process", max_workers=3),
+        "futures": dict(
+            executor="futures", max_workers=3,
+            futures_pool=ThreadPoolExecutor(max_workers=3),
+        ),
+    }
+    results, records, bytes_ = {}, {}, {}
+    for name, kwargs in runs.items():
+        path = str(tmp_path / f"{name}.json")
+        session = TuningSession(
+            SPEC.replace(store="json", store_path=path)
+        )
+        results[name] = session.run_matrix(**kwargs)
+        records[name] = session.last_record.result
+        bytes_[name] = store_values_bytes(path)
+    for name in ("legacy", "process", "futures"):
+        assert_same_cells(results["serial"], results[name])
+        assert records[name]["cells"] == records["serial"]["cells"]
+        assert bytes_[name] == bytes_["serial"]
+    # shard stores were merged and cleaned up
+    assert not [f for f in os.listdir(tmp_path) if ".shard" in f]
+
+
+def test_within_cell_split_of_big_e_row():
+    """A single-cell matrix — where the old `len(cells) > 1` guard silently
+    ran serial — now splits the cell across workers, bit-identically."""
+    spec = SPEC.replace(
+        algorithms=("ga",),
+        design=ExperimentDesign(sample_sizes=(25,), n_experiments=(6,), final_repeats=3),
+        dataset_size=None,
+    )
+    serial = TuningSession(spec)
+    base = serial.run_matrix()
+    assert len(serial.last_unit_plan) == 1
+    sharded = TuningSession(spec)
+    split = sharded.run_matrix(executor="process", max_workers=3)
+    assert len(sharded.last_unit_plan) >= 3      # the cell actually split
+    assert_same_cells(base, split)
+
+
+def test_unit_experiments_cap_is_bit_identical():
+    spec = SPEC.replace(algorithms=("rs", "rf"))
+    base = repro.tune_matrix(spec)
+    session = TuningSession(spec)
+    capped = session.run_matrix(unit_experiments=1)
+    assert len(session.last_unit_plan) == 8      # 2 cells x 4 experiments
+    assert_same_cells(base, capped)
+
+
+def test_futures_pool_alone_implies_parallel_executor():
+    """Passing a pool IS the parallelism request: no max_workers/executor
+    needed, and the pool must actually be used (not silently degraded)."""
+    class CountingPool(ThreadPoolExecutor):
+        submits = 0
+
+        def submit(self, *args, **kwargs):
+            type(self).submits += 1
+            return super().submit(*args, **kwargs)
+
+    spec = SPEC.replace(algorithms=("rs", "ga"), dataset_size=None)
+    base = repro.tune_matrix(spec)
+    res = repro.tune_matrix(spec, futures_pool=CountingPool(max_workers=2))
+    assert CountingPool.submits == 2
+    assert_same_cells(base, res)
+    with pytest.raises(ValueError, match="futures_pool"):
+        repro.tune_matrix(spec, executor="process",
+                          futures_pool=ThreadPoolExecutor(max_workers=2))
+
+
+def test_futures_default_pool_spawns_processes(tmp_path):
+    spec = SPEC.replace(
+        algorithms=("rs",), dataset_size=None,
+        store="json", store_path=str(tmp_path / "f.json"),
+    )
+    base = repro.tune_matrix(spec.replace(store=None, store_path=None))
+    res = repro.tune_matrix(spec, executor="futures", max_workers=2)
+    assert_same_cells(base, res)
+
+
+# --------------------------------------------------------- degrade + errors
+
+
+def test_parallel_request_degrades_to_serial_with_warning():
+    spec = SPEC.replace(
+        algorithms=("ga",),
+        design=ExperimentDesign(sample_sizes=(25,), n_experiments=(1,), final_repeats=3),
+        dataset_size=None,
+    )
+    with pytest.warns(UserWarning, match="degrades to serial"):
+        res = TuningSession(spec).run_matrix(shards=4)
+    assert set(res.cells) == {("ga", 25)}
+
+
+def test_resume_without_store_warns():
+    spec = SPEC.replace(algorithms=("ga",), dataset_size=None)
+    with pytest.warns(UserWarning, match="persistent store"):
+        repro.tune_matrix(spec, resume=True)
+
+
+def test_parallel_run_rejects_in_process_overrides():
+    from repro.core import make_measurement
+
+    session = TuningSession(
+        SPEC,
+        measurement_factory=lambda s: make_measurement(
+            "costmodel", kernel="harris", seed=s
+        ),
+    )
+    for executor in ("process", "futures"):
+        with pytest.raises(RuntimeError, match="serialized spec"):
+            session.run_matrix(executor=executor, max_workers=2)
+
+
+# ------------------------------------------------------------ kill-and-resume
+
+
+def spy_run_unit(monkeypatch):
+    ran = []
+    orig = TuningSession.run_unit
+
+    def spy(self, u):
+        ran.append(u.key)
+        return orig(self, u)
+
+    monkeypatch.setattr(TuningSession, "run_unit", spy)
+    return ran
+
+
+def test_resume_skips_journaled_units(tmp_path, monkeypatch):
+    """A run interrupted after K units resumes from the journal: completed
+    units are never re-executed (zero re-measurements — run_unit is not even
+    called) and the final matrix is bit-identical to an uninterrupted run."""
+    clean = repro.tune_matrix(SPEC)
+    spec = SPEC.replace(store="json", store_path=str(tmp_path / "c.json"))
+    # "interrupted" run: execute + journal only the first 2 of 4+ units
+    partial = TuningSession(spec)
+    units = build_units(partial.cells(), min_units=4)
+    journal = partial.unit_journal()
+    for u in units[:2]:
+        journal.put(partial.run_unit(u))
+    partial.save_store()
+
+    ran = spy_run_unit(monkeypatch)
+    resumed = TuningSession(spec)
+    res = resumed.run_matrix(resume=True, max_workers=4, executor="serial",
+                             unit_experiments=None)
+    # the serial resume re-plans with min_units=1 (whole cells); journaled
+    # fine-grained fragments must still be composed/skipped
+    done_keys = {u.key for u in units[:2]}
+    assert not (done_keys & set(ran))
+    assert_same_cells(clean, res)
+
+
+def test_resume_ignores_journal_from_a_different_spec(tmp_path, monkeypatch):
+    """The journal namespace fingerprints the WHOLE spec (minus storage
+    fields): entries written under different searcher_kwargs / dataset
+    settings must never be served to a resumed run."""
+    spec = SPEC.replace(
+        algorithms=("ga",), dataset_size=None,
+        searcher="ga", searcher_kwargs={"pop_size": 8},
+        store="json", store_path=str(tmp_path / "c.json"),
+    )
+    first = TuningSession(spec)
+    first.run_matrix(resume=True)
+
+    changed = spec.replace(searcher_kwargs={"pop_size": 12})
+    ran = spy_run_unit(monkeypatch)
+    res = TuningSession(changed).run_matrix(resume=True)
+    assert len(ran) == len(build_units(TuningSession(changed).cells()))
+    assert_same_cells(repro.tune_matrix(changed.replace(store=None, store_path=None)), res)
+
+
+def test_resume_with_process_executor_after_serial_partial(tmp_path):
+    """Cross-executor resume: units journaled by an interrupted serial run
+    are skipped by a process-executor resume (journal payload bytes are
+    untouched — a re-run would rewrite its wall-clock)."""
+    spec = SPEC.replace(store="json", store_path=str(tmp_path / "c.json"))
+    partial = TuningSession(spec)
+    units = build_units(partial.cells(), min_units=3)
+    journal = partial.unit_journal()
+    done = [partial.run_unit(u) for u in units[:2]]
+    for r in done:
+        journal.put(r)
+    partial.save_store()
+    before = {
+        journal.key(r.unit): partial.store.get_meta(journal.key(r.unit))
+        for r in done
+    }
+
+    resumed = TuningSession(spec)
+    res = resumed.run_matrix(resume=True, executor="process", max_workers=3)
+    after_store = MeasurementStore(spec.store_path)
+    for k, v in before.items():
+        assert after_store.get_meta(k) == v     # entry untouched => not re-run
+    assert_same_cells(repro.tune_matrix(SPEC), res)
+
+
+def test_resume_recovers_killed_workers_shard_stores(tmp_path, monkeypatch):
+    """A parallel run killed before the merge leaves *.shard<k> stores whose
+    journals hold the workers' completed units; a resumed run absorbs them
+    and re-executes nothing that finished."""
+    spec = SPEC.replace(
+        algorithms=("rs", "ga"),
+        store="json", store_path=str(tmp_path / "c.json"),
+    )
+    # simulate the killed worker: a full serial run journaled into a store
+    # that never became the parent store
+    ghost = TuningSession(spec.replace(store_path=str(tmp_path / "ghost.json")))
+    ghost_res = ghost.run_matrix()
+    shutil.move(str(tmp_path / "ghost.json"), str(tmp_path / "c.json.shard0"))
+
+    ran = spy_run_unit(monkeypatch)
+    resumed = TuningSession(spec)
+    res = resumed.run_matrix(resume=True)
+    assert ran == []                            # everything recovered
+    assert not os.path.exists(str(tmp_path / "c.json.shard0"))
+    assert_same_cells(ghost_res, res)
+
+
+# ------------------------------------------------------------- wall-clock
+
+
+def test_cell_wall_clock_lands_in_record_and_figures(tmp_path):
+    out = str(tmp_path / "out")
+    repro.tune_matrix(SPEC.replace(cache_key="harris/v5e"), out_dir=out)
+    rec = repro.RunRecord.load(os.path.join(out, "harris_v5e.json"))
+    walls = rec.extra["cell_wall_s"]
+    assert {(w["algo"], w["sample_size"]) for w in walls} == {
+        ("rs", 25), ("rf", 25), ("ga", 25)
+    }
+    assert all(w["wall_s"] >= 0 for w in walls)
+
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.figures import load_all, render_grid, search_cost
+
+    table = search_cost(load_all(out))
+    assert table[("harris", "v5e")]["ga"][25] >= 0
+    assert "search cost" in render_grid(table, fmt="{:.2f}s", title="search cost")

@@ -397,6 +397,25 @@ def test_warm_store_rerun_zero_recompiles(tmp_path):
     assert np.isfinite(r2.final_value)
 
 
+def store_sections(path):
+    """(values, non-journal meta, journal keys) of a JSON store file.  Unit-
+    journal entries carry per-run wall-clocks, which legitimately differ
+    between two runs of the same matrix; everything else must not."""
+    import json
+
+    with open(path) as f:
+        raw = json.load(f)
+    if not (isinstance(raw, dict) and raw.get("__format__") == 2):
+        return raw, {}, set()
+    meta = raw.get("meta", {})
+    journal = {k for k in meta if k.startswith("__unit__|")}
+    return (
+        raw["values"],
+        {k: v for k, v in meta.items() if k not in journal},
+        journal,
+    )
+
+
 def test_matrix_sharded_warm_store_bit_identical(tmp_path):
     design = ExperimentDesign(sample_sizes=(3, 4), n_experiments=(2, 1),
                               final_repeats=2)
@@ -404,17 +423,19 @@ def test_matrix_sharded_warm_store_bit_identical(tmp_path):
     spec = small_spec(budget=None, design=design, algorithms=("rs", "ga"),
                       store="json", store_path=single)
     res1 = repro.tune_matrix(spec)
-    with open(single) as f:
-        single_bytes = f.read()
+    vals1, meta1, journal1 = store_sections(single)
 
     # warm sharded re-run against a COPY of the single-process store:
     # workers seed their shard stores from it, so nothing is re-measured
-    # and the merged store comes back bit-identical
+    # and the merged store's measurements come back bit-identical (the unit
+    # journal's wall-clocks are the only thing allowed to move)
     shard_path = str(tmp_path / "shard.json")
     shutil.copy(single, shard_path)
     res2 = repro.tune_matrix(spec.replace(store_path=shard_path), shards=2)
-    with open(shard_path) as f:
-        assert f.read() == single_bytes
+    vals2, meta2, journal2 = store_sections(shard_path)
+    assert vals2 == vals1
+    assert meta2 == meta1
+    assert journal2 == journal1
     for key in res1.cells:
         np.testing.assert_array_equal(
             res1.cells[key].final_values, res2.cells[key].final_values

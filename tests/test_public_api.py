@@ -12,7 +12,6 @@ from repro.core import (
     CachedMeasurement,
     DiskCachedMeasurement,
     ExperimentDesign,
-    MatrixRunner,
     MeasurementStore,
     RunRecord,
     SqliteMeasurementStore,
@@ -343,29 +342,32 @@ def test_sharded_run_rejects_in_process_overrides():
         session.run_matrix(shards=2)
 
 
-# ------------------------------------------------------------ deprecation shims
+# ------------------------------------------------------------ overrides + shims
 
 
-def test_matrix_runner_shim_warns_and_delegates():
+def test_matrix_runner_shim_is_gone():
+    # the deprecated MatrixRunner facade was removed; in-process callers use
+    # TuningSession keyword overrides instead
+    with pytest.raises(ImportError):
+        from repro.core import MatrixRunner  # noqa: F401
+
+
+def test_session_overrides_match_facade():
+    """A session built from live objects (space + measurement factory) is
+    bit-identical to the spec-described facade run."""
     w, chip = WORKLOADS["harris"], CHIPS["v5e"]
-    space = executable_space(w, chip)
     design = ExperimentDesign(sample_sizes=(25,), n_experiments=(2,), final_repeats=3)
-    with pytest.warns(DeprecationWarning, match="tune_matrix"):
-        runner = MatrixRunner(
-            space,
-            lambda s: CostModelMeasurement(w, chip, seed=s),
-            design,
-            algorithms=("rs", "ga"),
-            seed=11,
-        )
-    shim = runner.run()
-    facade = repro.tune_matrix(
-        TuningSpec(**SMOKE, algorithms=("rs", "ga"), design=design, seed=11)
-    )
-    assert set(shim.cells) == set(facade.cells)
-    for key in shim.cells:
+    spec = TuningSpec(**SMOKE, algorithms=("rs", "ga"), design=design, seed=11)
+    override = TuningSession(
+        spec,
+        space=executable_space(w, chip),
+        measurement_factory=lambda s: CostModelMeasurement(w, chip, seed=s),
+    ).run_matrix()
+    facade = repro.tune_matrix(spec)
+    assert set(override.cells) == set(facade.cells)
+    for key in override.cells:
         np.testing.assert_array_equal(
-            shim.cells[key].final_values, facade.cells[key].final_values
+            override.cells[key].final_values, facade.cells[key].final_values
         )
 
 

@@ -6,8 +6,9 @@ import pytest
 from repro.core import (
     ExperimentDesign,
     MatrixResults,
-    MatrixRunner,
     SampleDataset,
+    TuningSession,
+    TuningSpec,
     stats,
 )
 from repro.costmodel import (
@@ -24,14 +25,14 @@ def smoke_matrix():
     w, chip = WORKLOADS["harris"], CHIPS["v5e"]
     space = executable_space(w, chip)
     ds = SampleDataset.generate(space, CostModelMeasurement(w, chip, seed=9), n=800, seed=1)
-    runner = MatrixRunner(
-        space,
-        lambda s: CostModelMeasurement(w, chip, seed=s),
-        ExperimentDesign.smoke(),
-        dataset=ds,
+    spec = TuningSpec(
+        kernel="harris",
+        backend_kwargs={"chip": "v5e"},
         algorithms=("rs", "rf", "ga", "bo_gp", "bo_tpe"),
+        design=ExperimentDesign.smoke(),
     )
-    return runner.run(), true_optimum(w, chip)[1]
+    session = TuningSession(spec, dataset=ds)
+    return session.run_matrix(), true_optimum(w, chip)[1]
 
 
 def test_matrix_has_all_cells(smoke_matrix):
