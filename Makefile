@@ -3,7 +3,7 @@
 # themselves when absent).
 PYTHON ?= python
 
-.PHONY: test test-fast bench lint install-dev smoke-pallas smoke-matrix
+.PHONY: test test-fast bench lint install-dev smoke-pallas smoke-matrix docs-check report
 
 test:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q
@@ -16,7 +16,9 @@ smoke-pallas:
 
 # tier-2: a small paper matrix through the work-unit executor layer — first
 # pass fans units across 2 worker processes, second pass (--force, same
-# store) must resume entirely from the unit journal
+# store) must resume entirely from the unit journal and then render the
+# analysis REPORT.md (tables + figures + claim verdicts, uploaded as a CI
+# artifact)
 smoke-matrix:
 	rm -rf results/smoke_matrix
 	PYTHONPATH=src $(PYTHON) -m benchmarks.paper_matrix --design scaled --budget 100 \
@@ -24,10 +26,20 @@ smoke-matrix:
 	  --executor process --max-workers 2 --resume
 	PYTHONPATH=src $(PYTHON) -m benchmarks.paper_matrix --design scaled --budget 100 \
 	  --bench add --chip v5e --algos rs,ga --out results/smoke_matrix \
-	  --executor process --max-workers 2 --resume --force
+	  --executor process --max-workers 2 --resume --force --report
+	test -f results/smoke_matrix/REPORT.md
+
+# render REPORT.md from any results directory: make report DIR=results/matrix_100
+report:
+	PYTHONPATH=src $(PYTHON) -m repro.analysis $(DIR)
+
+# tier-2: extract and execute every runnable python snippet in docs/*.md
+# (see tools/docs_check.py for the skip-marker contract)
+docs-check:
+	$(PYTHON) tools/docs_check.py docs
 
 lint:
-	ruff check src tests benchmarks examples
+	ruff check src tests benchmarks examples tools
 
 test-fast:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q tests/test_space.py tests/test_searchers.py tests/test_costmodel.py tests/test_stats.py tests/test_surrogates.py

@@ -1,198 +1,47 @@
-"""Paper figure/table reproductions from matrix results.
+"""Thin CLI/compat shim — the figure and table layer lives in
+``repro.analysis`` now (stats, matplotlib figures, claim verdicts, report
+generation; see ``docs/analysis_and_report.md``).
 
-One function per paper artifact:
-  fig2  — percentage-of-optimum per (algorithm x sample size) per combo
-  fig3  — aggregate mean + bootstrap CI across combos
-  fig4a — median speedup over Random Search
-  fig4b — CLES (probability of beating RS)
-plus the MWU significance companion the paper applies throughout.
+This module re-exports the old names so existing callers keep working, and
+
+    PYTHONPATH=src python -m benchmarks.figures results/smoke_matrix
+
+renders the full ``REPORT.md`` (same as ``python -m repro.analysis``).
 """
 
 from __future__ import annotations
 
-import json
-import os
+from repro.analysis import ALGOS, load_all
+from repro.analysis.records import normalize_meta as _normalize_meta
+from repro.analysis.report import (
+    main,
+    render_fig2,
+    render_fig3,
+    render_grid,
+)
+from repro.analysis.stats import (
+    fig2_pct_optimum,
+    fig3_aggregate,
+    fig4a_speedup,
+    fig4b_cles,
+    mwu_vs_rs,
+    search_cost,
+)
 
-import numpy as np
+__all__ = [
+    "ALGOS",
+    "_normalize_meta",
+    "fig2_pct_optimum",
+    "fig3_aggregate",
+    "fig4a_speedup",
+    "fig4b_cles",
+    "load_all",
+    "mwu_vs_rs",
+    "render_fig2",
+    "render_fig3",
+    "render_grid",
+    "search_cost",
+]
 
-from repro.core import MatrixResults, stats
-
-ALGOS = ("rs", "rf", "ga", "bo_gp", "bo_tpe")
-
-
-def _normalize_meta(meta: dict) -> dict:
-    """Accept both a versioned RunRecord (the tune_matrix facade's output)
-    and the legacy flat meta dict; always expose ``meta["optimum"]`` as the
-    pct-of-optimum denominator (the backend's noise-free true optimum when
-    available, else the best observed final)."""
-    if "run_record_version" not in meta:
-        return meta
-    result = dict(meta.get("result", {}))
-    flat = {**meta.get("extra", {}), **result}
-    flat["optimum"] = result.get("true_optimum", result.get("best_observed"))
-    flat["spec"] = meta.get("spec", {})
-    flat["provenance"] = meta.get("provenance", {})
-    # which measurement produced these numbers: "costmodel" (analytical,
-    # has a true optimum) vs "pallas" (real execution — pct-of-optimum is
-    # relative to best observed).  backend_provenance carries the detail
-    # (interpret flag, device kind, repeats, warmup) when recorded.
-    flat["backend"] = flat["spec"].get("backend", "costmodel")
-    return flat
-
-
-def load_all(results_dir: str) -> dict:
-    """{(bench, chip): (MatrixResults, meta)} for every stored combo."""
-    out = {}
-    for fname in sorted(os.listdir(results_dir)):
-        if not fname.endswith(".npz") or "_dataset_" in fname:
-            continue
-        bench, chip = fname[:-4].rsplit("_", 1)
-        res = MatrixResults.load(os.path.join(results_dir, fname))
-        with open(os.path.join(results_dir, f"{bench}_{chip}.json")) as f:
-            meta = _normalize_meta(json.load(f))
-        out[(bench, chip)] = (res, meta)
-    return out
-
-
-def fig2_pct_optimum(results: dict) -> dict:
-    """{(bench, chip): {algo: {S: median pct-of-optimum}}}."""
-    table = {}
-    for key, (res, meta) in results.items():
-        opt = meta["optimum"]
-        table[key] = {
-            algo: {
-                s: float(np.median(stats.pct_of_optimum(res.finals(algo, s), opt)))
-                for s in res.sample_sizes()
-            }
-            for algo in ALGOS
-            if (algo, res.sample_sizes()[0]) in res.cells
-        }
-    return table
-
-
-def fig3_aggregate(results: dict) -> dict:
-    """{algo: {S: (mean, lo, hi)}} across all combos (bootstrap CI)."""
-    f2 = fig2_pct_optimum(results)
-    sample_sizes = sorted({s for t in f2.values() for a in t.values() for s in a})
-    out = {}
-    for algo in ALGOS:
-        out[algo] = {}
-        for s in sample_sizes:
-            vals = np.array([t[algo][s] for t in f2.values() if algo in t and s in t[algo]])
-            if len(vals):
-                out[algo][s] = stats.bootstrap_ci(vals)
-    return out
-
-
-def fig4a_speedup(results: dict) -> dict:
-    """{(bench, chip): {algo: {S: median speedup over RS}}}."""
-    table = {}
-    for key, (res, _) in results.items():
-        table[key] = {}
-        for algo in ALGOS:
-            if algo == "rs":
-                continue
-            table[key][algo] = {
-                s: stats.median_speedup(res.finals("rs", s), res.finals(algo, s))
-                for s in res.sample_sizes()
-            }
-    return table
-
-
-def fig4b_cles(results: dict) -> dict:
-    """{(bench, chip): {algo: {S: P(algo beats RS)}}}."""
-    table = {}
-    for key, (res, _) in results.items():
-        table[key] = {}
-        for algo in ALGOS:
-            if algo == "rs":
-                continue
-            table[key][algo] = {
-                s: stats.cles_lower_better(res.finals(algo, s), res.finals("rs", s))
-                for s in res.sample_sizes()
-            }
-    return table
-
-
-def search_cost(results: dict) -> dict:
-    """{(bench, chip): {algo: {S: wall seconds}}} — per-cell search cost.
-
-    The work-unit layer records wall-clock per executed unit and the session
-    aggregates it per cell into ``RunRecord.extra["cell_wall_s"]`` (sums of
-    unit walls, so the number is total compute even for parallel runs).
-    Plot alongside the quality tables: the paper's 'which algorithm at which
-    sample size' question is really quality *per unit of search cost*.
-    Combos recorded before the wall-clock landed are skipped.
-    """
-    table = {}
-    for key, (_, meta) in results.items():
-        rows = meta.get("cell_wall_s")
-        if not rows:
-            continue
-        t: dict = {}
-        for r in rows:
-            t.setdefault(r["algo"], {})[r["sample_size"]] = float(r["wall_s"])
-        table[key] = t
-    return table
-
-
-def mwu_vs_rs(results: dict) -> dict:
-    """{(bench, chip): {algo: {S: p-value}}} (alpha = 0.01 in the paper)."""
-    table = {}
-    for key, (res, _) in results.items():
-        table[key] = {}
-        for algo in ALGOS:
-            if algo == "rs":
-                continue
-            table[key][algo] = {
-                s: stats.mann_whitney_u(
-                    res.finals(algo, s), res.finals("rs", s)
-                ).p_value
-                for s in res.sample_sizes()
-            }
-    return table
-
-
-# ------------------------------------------------------------ rendering
-def render_fig2(table: dict) -> str:
-    lines = []
-    for (bench, chip), algos in sorted(table.items()):
-        sizes = sorted(next(iter(algos.values())))
-        lines.append(f"\n### pct-of-optimum — {bench} x {chip}")
-        lines.append("| algo | " + " | ".join(f"S={s}" for s in sizes) + " |")
-        lines.append("|---|" + "---|" * len(sizes))
-        for algo, row in algos.items():
-            lines.append(
-                f"| {algo} | " + " | ".join(f"{row[s]:.1f}%" for s in sizes) + " |"
-            )
-    return "\n".join(lines)
-
-
-def render_grid(table: dict, fmt: str = "{:.3f}", title: str = "") -> str:
-    lines = []
-    for (bench, chip), algos in sorted(table.items()):
-        sizes = sorted(next(iter(algos.values())))
-        lines.append(f"\n### {title} — {bench} x {chip}")
-        lines.append("| algo | " + " | ".join(f"S={s}" for s in sizes) + " |")
-        lines.append("|---|" + "---|" * len(sizes))
-        for algo, row in algos.items():
-            lines.append(
-                f"| {algo} | " + " | ".join(fmt.format(row[s]) for s in sizes) + " |"
-            )
-    return "\n".join(lines)
-
-
-def render_fig3(agg: dict) -> str:
-    sizes = sorted({s for rows in agg.values() for s in rows})
-    lines = ["| algo | " + " | ".join(f"S={s}" for s in sizes) + " |",
-             "|---|" + "---|" * len(sizes)]
-    for algo, rows in agg.items():
-        cells = []
-        for s in sizes:
-            if s in rows:
-                m, lo, hi = rows[s]
-                cells.append(f"{m:.1f}% [{lo:.1f}, {hi:.1f}]")
-            else:
-                cells.append("-")
-        lines.append(f"| {algo} | " + " | ".join(cells) + " |")
-    return "\n".join(lines)
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -21,17 +21,15 @@ sys.path.insert(0, "src")
 sys.path.insert(0, ".")
 
 
-from benchmarks.figures import (
+from repro.analysis import load_all, validate
+from repro.analysis.claims import INSUFFICIENT
+from repro.analysis.report import render_fig2, render_fig3, render_grid
+from repro.analysis.stats import (
     fig2_pct_optimum,
     fig3_aggregate,
     fig4a_speedup,
     fig4b_cles,
-    load_all,
-    render_fig2,
-    render_fig3,
-    render_grid,
 )
-from benchmarks.validate_claims import validate
 from repro.launch.roofline import all_rows, markdown_table
 
 MATRIX_DIR = "results/paper_matrix"
@@ -65,10 +63,14 @@ def section_validation() -> str:
     except Exception as e:  # matrix not finished yet
         return f"## §Validation\n\n(matrix incomplete: {e})\n"
     lines = ["## §Validation — paper claims vs our matrix\n"]
-    n_pass = sum(c["pass"] for c in checks.values())
-    lines.append(f"**{n_pass}/{len(checks)} claims reproduced.**\n")
-    for name, c in checks.items():
-        lines.append(f"- **[{'PASS' if c['pass'] else 'FAIL'}] {name}** — `{c['detail']}`")
+    n_pass = sum(v.passed for v in checks.values())
+    n_dec = sum(v.status != INSUFFICIENT for v in checks.values())
+    lines.append(f"**{n_pass}/{n_dec} decidable claims reproduced"
+                 + (f" ({len(checks) - n_dec} insufficient-data).**\n"
+                    if n_dec != len(checks) else ".**\n"))
+    for name, v in checks.items():
+        tag = {"pass": "PASS", "fail": "FAIL", INSUFFICIENT: "N/A"}[v.status]
+        lines.append(f"- **[{tag}] {name}** — `{v.detail}`")
     lines.append("""
 **Analysis of the divergences.**  The paper's headline — *no single
 algorithm wins at every sample size* — reproduces cleanly (winners rotate

@@ -16,10 +16,14 @@ the serial run; ``--resume`` replays units an interrupted run already
 journaled in the measurement store, re-measuring nothing.  ``--shards N``
 is the legacy spelling of the process executor.
 
+``--report`` renders ``REPORT.md`` (speedup/rank tables, figures, paper-claim
+verdicts — see ``repro.analysis``) into the results dir after the run, so the
+full-scale paper reproduction is "run the matrix, read REPORT.md".
+
 Usage:
-    PYTHONPATH=src python -m benchmarks.paper_matrix --design paper
+    PYTHONPATH=src python -m benchmarks.paper_matrix --design paper --report
     PYTHONPATH=src python -m benchmarks.paper_matrix --design scaled --budget 2000 \\
-        --executor process --max-workers 4 --store sqlite --resume
+        --executor process --max-workers 4 --store sqlite --resume --report
 """
 
 from __future__ import annotations
@@ -147,6 +151,10 @@ def main() -> None:
                     help="analytical model, or real pallas_call execution "
                          "(interpret on CPU; use a scaled design — real "
                          "timings are wall-clock-bound)")
+    ap.add_argument("--report", action="store_true",
+                    help="after the run, render REPORT.md (tables + figures "
+                         "+ claim verdicts) into the results dir via "
+                         "repro.analysis")
     ap.add_argument("--out", default=None)
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
@@ -180,6 +188,10 @@ def main() -> None:
                       backend=args.backend, executor=args.executor,
                       max_workers=args.max_workers, resume=args.resume)
     print(f"[matrix] all combos done in {(time.time()-t0)/60:.1f} min -> {out_dir}")
+    if args.report:
+        from repro.analysis import generate_report
+
+        print(f"[matrix] report -> {generate_report(out_dir)}")
 
 
 if __name__ == "__main__":

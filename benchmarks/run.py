@@ -26,17 +26,16 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(ROOT, "src"))
 sys.path.insert(0, ROOT)
 
-from repro.core import ExperimentDesign, TuningSession, TuningSpec
-
-from benchmarks.figures import (
+from repro.analysis import load_all, validate
+from repro.analysis.stats import (
     fig2_pct_optimum,
     fig3_aggregate,
     fig4a_speedup,
     fig4b_cles,
-    load_all,
 )
+from repro.core import ExperimentDesign, TuningSession, TuningSpec
+
 from benchmarks.paper_matrix import BENCHMARKS, CHIP_NAMES, combo_path, run_combo
-from benchmarks.validate_claims import validate
 
 
 def ensure_matrix(out_dir: str, budget: int, shards: int = 1) -> str:
@@ -217,8 +216,8 @@ def main() -> None:
     table_pallas_backend()
     print("# paper-claims validation")
     checks = validate(results_dir)
-    for name, c in checks.items():
-        print(f"claim/{name},{int(c['pass'])},{c['detail']}")
+    for name, v in checks.items():
+        print(f"claim/{name},{v.status},{v.detail}")
     print(f"# total {time.time()-t0:.0f}s")
 
 

@@ -1,0 +1,5 @@
+"""``python -m repro.analysis <results_dir>`` — alias for the report CLI."""
+
+from .report import main
+
+raise SystemExit(main())

@@ -46,14 +46,45 @@ class TuningResult:
     history_values: list = field(default_factory=list)
     n_samples: int = 0
 
-    def trajectory(self) -> np.ndarray:
-        """Best-so-far curve over the sample history."""
+    def trajectory(self, budget: int | None = None) -> np.ndarray:
+        """Best-so-far curve over the sample history.
+
+        THE budget-clipping convention lives here, once (the analysis layer's
+        budget-resolved statistics call this method instead of re-deriving
+        curves — see ``repro.analysis.stats.best_at_budget``):
+
+        * ``budget=None`` returns the raw curve, length ``len(history_values)``.
+        * With ``budget``, the returned curve has length **exactly** ``budget``.
+          A search that ended early — exhausted space, the GA all-revisit
+          livelock break — holds its final best for the remaining samples
+          (right-padding with ``curve[-1]``): spending budget a terminated
+          search cannot use changes nothing, so best-at-budget is well defined
+          past the end of the history.
+        * A history *longer* than ``budget`` is a caller error (the engine's
+          ``finish()`` already enforces ``n_samples <= budget``) and raises.
+        """
         if not self.history_values:
             raise ValueError(
                 "TuningResult has an empty sample history — no trajectory. "
                 "Was the search run (finish() before any tell())?"
             )
-        return np.minimum.accumulate(np.asarray(self.history_values, dtype=np.float64))
+        curve = np.minimum.accumulate(
+            np.asarray(self.history_values, dtype=np.float64)
+        )
+        if budget is None:
+            return curve
+        if budget < 1:
+            raise ValueError("budget must be >= 1")
+        if len(curve) > budget:
+            raise ValueError(
+                f"history has {len(curve)} samples > budget {budget}: "
+                "trajectories never clip — pass the budget the search ran with"
+            )
+        if len(curve) < budget:
+            curve = np.concatenate(
+                [curve, np.full(budget - len(curve), curve[-1])]
+            )
+        return curve
 
 
 class Searcher(ABC):

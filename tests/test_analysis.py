@@ -1,0 +1,344 @@
+"""The repro.analysis subsystem: loading, deterministic bootstrap stats,
+executor-invariant tables, three-valued claim verdicts, report generation,
+and the single budget-clipping convention shared with TuningResult."""
+
+import os
+
+import numpy as np
+import pytest
+
+import repro
+from repro import analysis
+from repro.analysis import claims as aclaims
+from repro.analysis import report as areport
+from repro.analysis import stats as astats
+from repro.analysis.records import ALGOS
+from repro.core import (
+    CellResult,
+    ExperimentDesign,
+    MatrixResults,
+    TuningResult,
+    TuningSpec,
+)
+
+SMOKE_SPEC = TuningSpec(
+    kernel="harris",
+    backend_kwargs={"chip": "v5e"},
+    algorithms=("rs", "rf", "ga", "bo_gp", "bo_tpe"),
+    design=ExperimentDesign.smoke(),
+    seed=3,
+    dataset_size=400,
+)
+
+
+@pytest.fixture(scope="module")
+def results_dir(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("analysis") / "mat")
+    repro.tune_matrix(SMOKE_SPEC, out_dir=out)
+    return out
+
+
+@pytest.fixture(scope="module")
+def results(results_dir):
+    return analysis.load_all(results_dir)
+
+
+# ------------------------------------------------------------------ loading
+
+
+def test_load_all_normalizes_run_record(results):
+    (res, meta) = results[("harris", "v5e")]
+    assert meta["optimum_is_true"] is True          # costmodel true optimum
+    assert meta["optimum"] > 0
+    assert meta["spec"]["kernel"] == "harris"
+    assert meta["backend"] == "costmodel"
+    assert set(res.algorithms()) == set(ALGOS)
+
+
+def test_normalize_meta_accepts_legacy_flat_dict():
+    meta = analysis.normalize_meta({"optimum": 2.0, "bench": "add"})
+    assert meta["optimum"] == 2.0
+    assert meta["optimum_is_true"] is True
+    assert meta["spec"] == {} and meta["backend"] == "costmodel"
+
+
+def test_present_algorithms_intersects_combos(results):
+    assert analysis.present_algorithms(results) == list(ALGOS)
+    assert analysis.present_algorithms({}) == []
+
+
+# --------------------------------------------------------- bootstrap tables
+
+
+def test_bootstrap_cis_deterministic_under_fixed_seed(results):
+    a = astats.speedup_with_ci(results, n_boot=300, seed=0)
+    b = astats.speedup_with_ci(results, n_boot=300, seed=0)
+    assert a == b                                   # bit-identical, not close
+    c = astats.speedup_with_ci(results, n_boot=300, seed=1)
+    flat = [
+        (x[1], x[2], y[1], y[2])
+        for k in a
+        for alg in a[k]
+        for x, y in zip(a[k][alg].values(), c[k][alg].values())
+    ]
+    assert any(x[:2] != x[2:] for x in flat)        # seed actually matters
+
+
+def test_speedup_ci_brackets_point_estimate(results):
+    point = astats.fig4a_speedup(results)
+    table = astats.speedup_with_ci(results, n_boot=300)
+    for key in table:
+        for algo, row in table[key].items():
+            for s, (mid, lo, hi) in row.items():
+                assert lo <= hi
+                assert mid == point[key][algo][s]
+
+
+def test_speedup_table_bit_stable_across_executors(tmp_path):
+    """The acceptance bar for the whole chain: serial and process executors
+    produce byte-identical RunRecords/arrays, so every analysis table —
+    including the seeded bootstrap CIs — is bit-identical too."""
+    spec = TuningSpec(
+        kernel="harris",
+        backend_kwargs={"chip": "v5e"},
+        algorithms=("rs", "rf", "ga"),
+        design=ExperimentDesign(sample_sizes=(25,), n_experiments=(4,),
+                                final_repeats=3),
+        seed=11,
+        dataset_size=200,
+    )
+    tables = {}
+    for name, kwargs in {
+        "serial": {},
+        "process": dict(executor="process", max_workers=3),
+    }.items():
+        out = str(tmp_path / name)
+        repro.tune_matrix(spec, out_dir=out, **kwargs)
+        loaded = analysis.load_all(out)
+        tables[name] = (
+            astats.fig4a_speedup(loaded),
+            astats.speedup_with_ci(loaded, n_boot=200),
+            astats.fig2_pct_optimum(loaded),
+            astats.rank_table(loaded),
+        )
+    assert tables["serial"] == tables["process"]
+
+
+# ----------------------------------------------------------------- rankings
+
+
+def test_rank_table_is_a_permutation_per_size(results):
+    ranks = astats.rank_table(results)[("harris", "v5e")]
+    for s in (25, 50):
+        assert sorted(ranks[a][s] for a in ALGOS) == [1, 2, 3, 4, 5]
+    means = astats.mean_ranks(results)
+    assert set(means) == set(ALGOS)
+    winners = astats.winners_by_size(results)
+    assert all(sum(w.values()) == 1 for w in winners.values())  # one combo
+
+
+# ------------------------------------------------------------------- claims
+
+
+def test_claims_insufficient_on_smoke_results(results):
+    """Tiny matrices must yield insufficient-data, never a false verdict."""
+    checks = analysis.check_claims(results)
+    assert set(checks) == {
+        "C1_bo_wins_small_S", "C2_ga_wins_large_S",
+        "C2b_ga_best_aggregate_large_S", "C3_speedup_larger_at_small_S",
+        "C4_more_consistent_at_large_S", "C5_rf_not_overall_winner",
+        "C6_bo_gp_nonmonotone_somewhere",
+    }
+    for v in checks.values():
+        assert v.status == aclaims.INSUFFICIENT, (v.claim, v.status)
+        assert not v.passed
+        assert "reason" in v.detail
+
+
+def test_ragged_matrix_yields_insufficient_not_crash(results_dir):
+    """A combo missing one (algo, S) cell — not a whole algorithm — must
+    still produce insufficient-data verdicts and render ragged tables."""
+    res_full = analysis.load_all(results_dir)
+    (full, meta) = res_full[("harris", "v5e")]
+    ragged = MatrixResults()
+    for (algo, s), cell in full.cells.items():
+        if (algo, s) != ("bo_tpe", 50):
+            ragged.add(cell)
+    results = {("harris", "v5e"): (ragged, meta)}
+    checks = analysis.check_claims(results)
+    assert all(v.status == aclaims.INSUFFICIENT for v in checks.values())
+    # tables stay usable: bo_tpe keeps its S=25 column, drops S=50
+    f2 = astats.fig2_pct_optimum(results)[("harris", "v5e")]
+    assert 25 in f2["bo_tpe"] and 50 not in f2["bo_tpe"]
+    assert "- |" in areport.render_fig2({("harris", "v5e"): f2})
+    ranks = astats.rank_table(results)[("harris", "v5e")]
+    assert sorted(a for a in ranks if 50 in ranks[a]) == sorted(
+        a for a in ALGOS if a != "bo_tpe"
+    )
+
+
+def test_missing_cell_beats_experiment_floor_in_sufficiency():
+    """With enough repeats everywhere else, a single missing (algo, S) cell
+    is the reported insufficiency — not a KeyError from winner counting."""
+    medians = {
+        (a, s): 1.2
+        for a in ALGOS
+        for s in (25, 50, 100, 200, 400)
+        if (a, s) != ("bo_tpe", 50)
+    }
+    results, _ = _synthetic_results(medians, n_exp=30)
+    checks = analysis.check_claims(results)
+    v = checks["C1_bo_wins_small_S"]
+    assert v.status == aclaims.INSUFFICIENT
+    assert "no bo_tpe/S=50 cell" in v.detail["reason"]
+
+
+def test_report_on_rs_only_results(tmp_path):
+    """Baseline-only results (nothing to compare against RS) must still
+    produce a report — empty comparison tables, no crash."""
+    out = str(tmp_path / "rs_only")
+    spec = TuningSpec(
+        kernel="harris", backend_kwargs={"chip": "v5e"},
+        algorithms=("rs",),
+        design=ExperimentDesign(sample_sizes=(25,), n_experiments=(3,),
+                                final_repeats=3),
+        dataset_size=100,
+    )
+    repro.tune_matrix(spec, out_dir=out)
+    path = analysis.generate_report(out, n_boot=50)
+    text = open(path).read()
+    assert "Paper-claim verdicts" in text
+    assert "(no data)" in text                   # empty speedup table
+    figs = os.path.join(out, "figures")
+    if analysis.HAVE_MATPLOTLIB:
+        assert "speedup_vs_sample_size.png" not in os.listdir(figs)
+
+
+def test_claims_insufficient_on_missing_algorithms(results_dir):
+    res = analysis.load_all(results_dir)
+    (full, meta) = res[("harris", "v5e")]
+    partial = MatrixResults()
+    for (algo, s), cell in full.cells.items():
+        if algo != "bo_tpe":
+            partial.add(cell)
+    checks = analysis.check_claims({("harris", "v5e"): (partial, meta)})
+    assert all(v.status == aclaims.INSUFFICIENT for v in checks.values())
+    assert "bo_tpe" in checks["C1_bo_wins_small_S"].detail["reason"]
+
+
+def _synthetic_results(medians: dict, n_exp: int = 30, spread: dict = None):
+    """One synthetic combo: finals per (algo, S) drawn around ``medians``
+    with per-size ``spread`` (distribution overlap drives CLES)."""
+    rng = np.random.default_rng(0)
+    sizes = sorted({s for _, s in medians})
+    res = MatrixResults()
+    for (algo, s), m in medians.items():
+        vals = np.maximum(
+            m + rng.normal(0, (spread or {}).get(s, 0.01), size=n_exp), 1.0
+        )
+        res.add(CellResult(
+            algo=algo, sample_size=s, final_values=vals,
+            search_best_values=vals.copy(),
+            n_samples_used=np.full(n_exp, s),
+        ))
+    meta = {"optimum": 1.0, "optimum_is_true": True, "spec": {},
+            "provenance": {}, "backend": "synthetic"}
+    return {("synth", "chip"): (res, meta)}, sizes
+
+
+def test_claims_decidable_on_sufficient_synthetic_data():
+    """A matrix engineered to satisfy every claim passes all seven —
+    proving the predicates evaluate once the data clears the bar."""
+    base = {
+        # small S: BO-GP clearly best, RS worst; large S: GA best, RS
+        # improving monotonically; BO-GP dips at 200 (the C6 shape).
+        "rs":     {25: 1.60, 50: 1.55, 100: 1.50, 200: 1.30, 400: 1.25},
+        "rf":     {25: 1.40, 50: 1.38, 100: 1.35, 200: 1.18, 400: 1.15},
+        "ga":     {25: 1.30, 50: 1.25, 100: 1.20, 200: 1.02, 400: 1.01},
+        "bo_gp":  {25: 1.05, 50: 1.06, 100: 1.08, 200: 1.25, 400: 1.12},
+        "bo_tpe": {25: 1.15, 50: 1.12, 100: 1.10, 200: 1.08, 400: 1.05},
+    }
+    medians = {(a, s): v for a, row in base.items() for s, v in row.items()}
+    # broad overlap at small S (CLES < 1), near-deterministic at large S
+    spread = {25: 0.15, 50: 0.15, 100: 0.12, 200: 0.005, 400: 0.005}
+    results, _ = _synthetic_results(medians, spread=spread)
+    checks = analysis.check_claims(results)
+    for v in checks.values():
+        assert v.status == aclaims.PASS, (v.claim, v.status, v.detail)
+
+
+def test_claims_fail_cleanly_when_contradicted():
+    """RF winning everywhere must FAIL C1/C5 — a verdict, not a data gap."""
+    medians = {
+        (a, s): (1.05 if a == "rf" else 1.5)
+        for a in ALGOS
+        for s in (25, 50, 100, 200, 400)
+    }
+    results, _ = _synthetic_results(medians)
+    checks = analysis.check_claims(results)
+    assert checks["C1_bo_wins_small_S"].status == aclaims.FAIL
+    assert checks["C5_rf_not_overall_winner"].status == aclaims.FAIL
+
+
+# ------------------------------------------------------------------- report
+
+
+def test_report_roundtrips_on_results_dir(results_dir):
+    path = analysis.generate_report(results_dir, n_boot=200)
+    assert path == os.path.join(results_dir, "REPORT.md")
+    text = open(path).read()
+    for needle in (
+        "median speedup over RS (95% bootstrap CI)",
+        "pct-of-optimum — harris x v5e",
+        "Paper-claim verdicts",
+        "insufficient-data",
+        "spec fingerprint",
+    ):
+        assert needle in text, needle
+    if analysis.HAVE_MATPLOTLIB:
+        figs = os.listdir(os.path.join(results_dir, "figures"))
+        assert len(figs) >= 2
+        for f in figs:
+            assert f"figures/{f}" in text        # report links every figure
+
+
+def test_report_cli(results_dir, capsys):
+    assert areport.main([results_dir, "--n-boot", "50"]) == 0
+    assert "REPORT.md" in capsys.readouterr().out
+
+
+def test_claims_cli(results_dir, capsys):
+    assert aclaims.main([results_dir]) == 0
+    out = capsys.readouterr().out
+    assert "insufficient-data" in out or "N/A" in out
+
+
+# ----------------------------------------------- budget-clipping convention
+
+
+def test_trajectory_budget_convention():
+    r = TuningResult(algo="rs", best_config={}, best_value=2.0,
+                     history_values=[3.0, 2.0, 4.0], n_samples=3)
+    np.testing.assert_array_equal(r.trajectory(), [3.0, 2.0, 2.0])
+    # early-terminated search holds its final best up to the budget
+    np.testing.assert_array_equal(r.trajectory(5), [3.0, 2.0, 2.0, 2.0, 2.0])
+    with pytest.raises(ValueError, match="never clip"):
+        r.trajectory(2)
+    with pytest.raises(ValueError, match="budget must be >= 1"):
+        r.trajectory(0)
+    with pytest.raises(ValueError, match="empty sample history"):
+        TuningResult(algo="rs", best_config={}, best_value=np.inf).trajectory()
+
+
+def test_stats_layer_agrees_with_trajectory():
+    r = TuningResult(algo="ga", best_config={}, best_value=1.0,
+                     history_values=[5.0, 1.0], n_samples=2)
+    assert astats.best_at_budget(r, 2) == 1.0
+    assert astats.best_at_budget(r, 400) == 1.0      # ended-early convention
+    np.testing.assert_array_equal(
+        astats.budget_curve(r, [1, 2, 10]), [5.0, 1.0, 1.0]
+    )
+
+
+def test_figures_degrade_gracefully(tmp_path):
+    assert analysis.make_figures({}, str(tmp_path / "figs")) == []

@@ -1,0 +1,109 @@
+"""Execute the Python code blocks in docs/*.md so snippets cannot rot.
+
+Rules (the contract `make docs-check` enforces):
+
+* every fenced ```python block is executed; other fences (bash, json, text)
+  are ignored,
+* blocks in one file share a namespace and run in order, so a snippet may
+  build on an earlier one's imports/variables — exactly as a reader would,
+* a block is skipped ONLY when the line directly above its opening fence is
+  the literal marker ``<!-- docs-check: skip -->`` (reserved for snippets
+  whose runtime is unreasonable for CI, e.g. full-scale matrix runs); the
+  skip is reported so it stays visible,
+* each file runs with the CWD set to a private temp directory (snippets that
+  write ``results/...`` stay sandboxed) and with ``src`` on ``sys.path``.
+
+Usage: python tools/docs_check.py [docs ...]
+Exits nonzero on the first failing block, printing file, line, and traceback.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+import traceback
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+sys.path.insert(0, REPO)                      # benchmarks.* imports
+
+SKIP_MARKER = "<!-- docs-check: skip -->"
+
+
+def extract_blocks(path: str) -> list[tuple[int, bool, str]]:
+    """[(first_code_line_no, skipped, source), ...] for ```python fences."""
+    blocks = []
+    lines = open(path).read().splitlines()
+    i = 0
+    while i < len(lines):
+        stripped = lines[i].strip()
+        if stripped.startswith("```") and stripped[3:].strip() == "python":
+            skipped = i > 0 and lines[i - 1].strip() == SKIP_MARKER
+            j = i + 1
+            while j < len(lines) and not lines[j].strip().startswith("```"):
+                j += 1
+            blocks.append((i + 2, skipped, "\n".join(lines[i + 1 : j])))
+            i = j
+        i += 1
+    return blocks
+
+
+def run_file(path: str) -> tuple[int, int, int]:
+    """Execute a file's blocks; returns (ran, skipped, failed)."""
+    blocks = extract_blocks(path)
+    if not blocks:
+        return 0, 0, 0
+    namespace: dict = {"__name__": f"docs_check:{os.path.basename(path)}"}
+    ran = skipped = failed = 0
+    cwd = os.getcwd()
+    with tempfile.TemporaryDirectory(prefix="docs_check_") as tmp:
+        os.chdir(tmp)
+        try:
+            for line_no, skip, src in blocks:
+                where = f"{os.path.relpath(path, REPO)}:{line_no}"
+                if skip:
+                    skipped += 1
+                    print(f"  SKIP {where} (explicit marker)")
+                    continue
+                try:
+                    code = compile(src, where, "exec")
+                    exec(code, namespace)
+                    ran += 1
+                    print(f"  ok   {where}")
+                except Exception:
+                    failed += 1
+                    print(f"  FAIL {where}\n{traceback.format_exc()}")
+                    break
+        finally:
+            os.chdir(cwd)
+    return ran, skipped, failed
+
+
+def main(argv: list[str]) -> int:
+    targets = argv or [os.path.join(REPO, "docs")]
+    files: list[str] = []
+    for t in targets:
+        t = os.path.abspath(t)          # paths must survive the chdir below
+        if os.path.isdir(t):
+            files += sorted(
+                os.path.join(t, f) for f in os.listdir(t) if f.endswith(".md")
+            )
+        else:
+            files.append(t)
+    total_ran = total_skip = 0
+    for path in files:
+        print(f"[docs-check] {os.path.relpath(path, REPO)}")
+        ran, skipped, failed = run_file(path)
+        total_ran += ran
+        total_skip += skipped
+        if failed:
+            print(f"[docs-check] FAILED in {path}")
+            return 1
+    print(f"[docs-check] {total_ran} blocks executed, {total_skip} skipped, "
+          f"{len(files)} files — all green")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
