@@ -3,7 +3,7 @@
 # themselves when absent).
 PYTHON ?= python
 
-.PHONY: test test-fast bench lint install-dev smoke-pallas smoke-matrix docs-check report
+.PHONY: test test-fast bench lint install-dev smoke-pallas smoke-matrix smoke-device docs-check report
 
 test:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q
@@ -28,6 +28,23 @@ smoke-matrix:
 	  --bench add --chip v5e --algos rs,ga --out results/smoke_matrix \
 	  --executor process --max-workers 2 --resume --force --report
 	test -f results/smoke_matrix/REPORT.md
+
+# tier-2: the device executor on a host faked to 4 chips
+# (XLA_FLAGS=--xla_force_host_platform_device_count=4) — the merged store's
+# measurement values must be byte-identical to a serial run of the same
+# spec, and the device run renders the analysis REPORT.md (CI artifact)
+smoke-device:
+	rm -rf results/smoke_device
+	PYTHONPATH=src $(PYTHON) -m benchmarks.paper_matrix --design scaled --budget 100 \
+	  --bench add --chip v5e --algos rs,ga --out results/smoke_device/serial
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+	  $(PYTHON) -m benchmarks.paper_matrix --design scaled --budget 100 \
+	  --bench add --chip v5e --algos rs,ga --out results/smoke_device/device \
+	  --executor device --max-workers 4 --resume --report
+	$(PYTHON) tools/compare_stores.py \
+	  results/smoke_device/serial/add_v5e_cache.json \
+	  results/smoke_device/device/add_v5e_cache.json
+	test -f results/smoke_device/device/REPORT.md
 
 # render REPORT.md from any results directory: make report DIR=results/matrix_100
 report:

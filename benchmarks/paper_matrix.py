@@ -99,13 +99,15 @@ def run_combo(bench: str, chip_name: str, design: ExperimentDesign, out_dir: str
               cache: bool = True, dispatch: str = "batch", shards: int = 1,
               store: str = "json", backend: str = "costmodel",
               executor: str | None = None, max_workers: int | None = None,
-              resume: bool = False) -> None:
+              resume: bool = False,
+              pipeline_workers: int | None = None) -> None:
     spec = combo_spec(bench, chip_name, design, out_dir, algorithms=algorithms,
                       seed=seed, cache=cache, dispatch=dispatch, store=store,
                       backend=backend)
     t0 = time.time()
     repro.tune_matrix(spec, shards=shards, executor=executor,
                       max_workers=max_workers, resume=resume,
+                      pipeline_workers=pipeline_workers,
                       out_dir=out_dir, verbose=verbose)
     record = repro.RunRecord.load(
         os.path.join(out_dir, f"{bench}_{chip_name}.json")
@@ -127,14 +129,21 @@ def main() -> None:
                     help="per-cell sample budget for --design scaled")
     ap.add_argument("--shards", type=int, default=1,
                     help="legacy spelling of --executor process --max-workers N")
-    ap.add_argument("--executor", choices=("serial", "process", "futures"),
+    ap.add_argument("--executor",
+                    choices=("serial", "process", "futures", "device"),
                     default=None,
                     help="EXECUTORS registry entry running each combo's "
                          "work units (default: serial, or process when "
-                         "workers > 1)")
+                         "workers > 1); 'device' pins worker threads to "
+                         "jax.devices() for multi-chip hosts")
     ap.add_argument("--max-workers", type=int, default=None,
                     help="worker count for parallel executors (units fan "
                          "out, including within-cell splits of big-E rows)")
+    ap.add_argument("--pipeline-workers", type=int, default=None,
+                    help="compile-prefetch pool threads for the staged "
+                         "pallas measurement pipeline (0/omitted: inline "
+                         "compile-then-time; results are identical either "
+                         "way)")
     ap.add_argument("--resume", action="store_true",
                     help="replay units journaled in the measurement store "
                          "by an interrupted run (zero re-measurements)")
@@ -186,7 +195,8 @@ def main() -> None:
             run_combo(bench, chip_name, design, out_dir, algorithms=algos,
                       shards=args.shards, store=args.store,
                       backend=args.backend, executor=args.executor,
-                      max_workers=args.max_workers, resume=args.resume)
+                      max_workers=args.max_workers, resume=args.resume,
+                      pipeline_workers=args.pipeline_workers)
     print(f"[matrix] all combos done in {(time.time()-t0)/60:.1f} min -> {out_dir}")
     if args.report:
         from repro.analysis import generate_report

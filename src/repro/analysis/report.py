@@ -104,9 +104,15 @@ def _render_ranks(results: dict) -> str:
 
 
 def _spec_fingerprint(spec: dict) -> str:
-    """Stable 8-hex id of a recorded spec (storage fields excluded, matching
-    the unit journal's namespace convention)."""
+    """Stable 8-hex id of a recorded spec (storage fields and the
+    pipeline_workers speed knob excluded, matching the unit journal's
+    namespace convention)."""
     d = {k: v for k, v in spec.items() if k not in ("store", "store_path")}
+    if isinstance(d.get("backend_kwargs"), dict):
+        d["backend_kwargs"] = {
+            k: v for k, v in d["backend_kwargs"].items()
+            if k != "pipeline_workers"
+        }
     try:
         return f"{stable_seed(json.dumps(d, sort_keys=True)):08x}"
     except (TypeError, ValueError):
@@ -252,7 +258,15 @@ def generate_report(
         ]
         cost = search_cost(results)
         if cost:
-            parts += [render_grid(cost, "{:.2f}s", "search cost (wall)")]
+            # wall with the staged pipeline's compile/measure split; cells
+            # from unstaged backends (or pre-breakdown records) show 0c+0m
+            parts += [
+                render_grid(
+                    cost,
+                    "{0[wall]:.2f}s ({0[compile]:.2f}c + {0[measure]:.2f}m)",
+                    "search cost (wall = compile + measure)",
+                )
+            ]
     parts += ["", "## Paper-claim verdicts", "", _claims_section(results), ""]
 
     os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)

@@ -14,7 +14,8 @@ One function per paper artifact (all consume the ``{(bench, chip):
 * :func:`rank_table` / :func:`mean_ranks` / :func:`winners_by_size` — the
   per-benchmark/per-architecture winner rankings the claims layer consumes,
 * :func:`search_cost` — per-cell wall-clock from
-  ``RunRecord.extra["cell_wall_s"]``.
+  ``RunRecord.extra["cell_wall_s"]``, split into compile vs. measure
+  seconds where the backend's staged pipeline recorded them.
 
 The scalar machinery (MWU, CLES, percentile bootstrap) lives in
 :mod:`repro.core.stats`; this module applies it across a results directory.
@@ -243,14 +244,20 @@ def winners_by_size(results: dict) -> dict:
 
 # ------------------------------------------------------------- search cost
 def search_cost(results: dict) -> dict:
-    """{(bench, chip): {algo: {S: wall seconds}}} — per-cell search cost.
+    """{(bench, chip): {algo: {S: {"wall", "compile", "measure"}}}} —
+    per-cell search cost with the staged pipeline's breakdown.
 
     The work-unit layer records wall-clock per executed unit and the session
     aggregates it per cell into ``RunRecord.extra["cell_wall_s"]`` (sums of
     unit walls, so the number is total compute even for parallel runs).
-    Read alongside the quality tables: the paper's 'which algorithm at which
-    sample size' question is really quality *per unit of search cost*.
-    Combos recorded before the wall-clock landed are skipped.
+    Staged backends (pallas) additionally charge each pipeline stage to a
+    clock, so ``compile`` (validity screen + compilation) and ``measure``
+    (fenced timing) split the wall per cell; unstaged backends report 0 for
+    both.  Read alongside the quality tables: the paper's 'which algorithm
+    at which sample size' question is really quality *per unit of search
+    cost* — and a cell whose wall is mostly ``compile`` is bounded by the
+    toolchain, not the tuner.  Combos recorded before the wall-clock landed
+    are skipped; records from before the breakdown carry 0 for both splits.
     """
     table = {}
     for key, (_, meta) in results.items():
@@ -259,6 +266,10 @@ def search_cost(results: dict) -> dict:
             continue
         t: dict = {}
         for r in rows:
-            t.setdefault(r["algo"], {})[r["sample_size"]] = float(r["wall_s"])
+            t.setdefault(r["algo"], {})[r["sample_size"]] = {
+                "wall": float(r["wall_s"]),
+                "compile": float(r.get("compile_s", 0.0)),
+                "measure": float(r.get("measure_s", 0.0)),
+            }
         table[key] = t
     return table

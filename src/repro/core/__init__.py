@@ -7,6 +7,7 @@ from .measurement import (
     BaseMeasurement,
     CachedMeasurement,
     CallableMeasurement,
+    StageClock,
     TimingMeasurement,
 )
 from .engine import (
@@ -54,6 +55,7 @@ __all__ = [
     "BaseMeasurement",
     "CachedMeasurement",
     "CallableMeasurement",
+    "StageClock",
     "TimingMeasurement",
     "DiskCachedMeasurement",
     "MeasurementStore",

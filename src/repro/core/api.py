@@ -226,10 +226,15 @@ class TuningSpec:
         return self.algorithms if self.algorithms is not None else (self.searcher,)
 
     def default_cache_key(self) -> str:
+        # pipeline_workers changes how fast measurements happen, never what
+        # they are — leaving it out keeps warm caches warm across the knob
+        kwargs = {
+            k: v for k, v in self.backend_kwargs.items() if k != "pipeline_workers"
+        }
         # the common costmodel case keeps its compact, store-compatible form
-        if set(self.backend_kwargs) == {"chip"}:
-            return f"{self.kernel}/{self.backend_kwargs['chip']}"
-        if self.backend_kwargs:
+        if set(kwargs) == {"chip"}:
+            return f"{self.kernel}/{kwargs['chip']}"
+        if kwargs:
             # backend kwargs change what a measurement MEANS (problem size,
             # repeats, noise, validity limits...) — bake them into the
             # namespace so a shared store never serves values from a
@@ -240,10 +245,7 @@ class TuningSpec:
                 return v if isinstance(v, (str, int, float, bool, type(None))) \
                     else f"<{type(v).__name__}>"
 
-            kw = ",".join(
-                f"{k}={stable(self.backend_kwargs[k])}"
-                for k in sorted(self.backend_kwargs)
-            )
+            kw = ",".join(f"{k}={stable(kwargs[k])}" for k in sorted(kwargs))
             return f"{self.kernel}/{self.backend}/{kw}"
         return f"{self.kernel}/{self.backend}"
 
@@ -425,9 +427,15 @@ class TuningSession:
                 f"backend {spec.backend!r} has no default space; set "
                 "TuningSpec.space explicitly"
             )
+        # the default factory reads the CURRENT spec (not the ctor argument):
+        # run_matrix(pipeline_workers=N) re-points self.spec at a replaced
+        # spec and the next measurement picks the knob up
         self._factory = measurement_factory or (
             lambda s: make_measurement(
-                spec.backend, kernel=spec.kernel, seed=s, **spec.backend_kwargs
+                self.spec.backend,
+                kernel=self.spec.kernel,
+                seed=s,
+                **self.spec.backend_kwargs,
             )
         )
         self._store_path = store_path if store_path is not None else spec.store_path
@@ -442,7 +450,7 @@ class TuningSession:
         self.measurement: BaseMeasurement | None = None  # last single-run backend
         self.last_record: RunRecord | None = None
         self.last_unit_plan: list[ExperimentUnit] = []
-        self._last_cell_walls: dict[tuple[str, int], float] = {}
+        self._last_cell_walls: dict[tuple[str, int], dict[str, float]] = {}
 
     # -- wiring ---------------------------------------------------------------
     def _make_measurement(self, exp_seed: int) -> BaseMeasurement:
@@ -534,6 +542,7 @@ class TuningSession:
         resume: bool = False,
         unit_experiments: int | None = None,
         futures_pool=None,
+        pipeline_workers: int | None = None,
     ) -> MatrixResults:
         """Run the experiment matrix through the executor layer.
 
@@ -548,8 +557,25 @@ class TuningSession:
         max_workers=N``.  ``resume=True`` replays completed units from the
         store's unit journal (zero re-measurements) and first absorbs any
         shard stores a killed parallel run left behind.
+        ``pipeline_workers=N`` enables the staged backend's compile-prefetch
+        pipeline (backends with ``Backend.pipeline``; the knob changes
+        wall-clock, not results, so caches and journals stay valid across
+        it).
         """
         t0 = time.time()
+        if pipeline_workers is not None:
+            if not self._backend.pipeline:
+                raise ValueError(
+                    f"backend {self.spec.backend!r} has no compile pipeline; "
+                    "pipeline_workers applies to staged backends only "
+                    "(BACKENDS[...].pipeline)"
+                )
+            self.spec = self.spec.replace(
+                backend_kwargs={
+                    **self.spec.backend_kwargs,
+                    "pipeline_workers": int(pipeline_workers),
+                }
+            )
         cells = self.cells()
         name = executor
         if name is None:
@@ -632,6 +658,12 @@ class TuningSession:
         d = dict(self._spec_dict_or_repr())
         for k in ("store", "store_path"):
             d.pop(k, None)
+        if isinstance(d.get("backend_kwargs"), dict):
+            # the pipeline knob changes execution speed, never results —
+            # journaled units stay valid with the prefetcher on or off
+            bk = dict(d["backend_kwargs"])
+            bk.pop("pipeline_workers", None)
+            d["backend_kwargs"] = bk
         try:
             fp = stable_seed(json.dumps(d, sort_keys=True))
         except (TypeError, ValueError):
@@ -684,6 +716,7 @@ class TuningSession:
             if (dataset is not None and unit.algo == "rf")
             else None
         )
+        stage_acc: dict[str, float] = {}
         for i, e in enumerate(range(unit.exp_lo, unit.exp_hi)):
             exp_seed = stable_seed(spec.seed, unit.algo, unit.sample_size, e)
             measurement = self.measurement = self._make_measurement(exp_seed)
@@ -709,6 +742,10 @@ class TuningSession:
             )
             search_best[i] = tr.best_value
             n_used[i] = tr.n_samples
+            # staged backends (pallas) report per-stage clocks; unstaged ones
+            # report {} and the unit carries no breakdown
+            for k, v in measurement.stage_times().items():
+                stage_acc[k] = stage_acc.get(k, 0.0) + float(v)
         wall = time.perf_counter() - t0
         if self.verbose:
             print(
@@ -723,6 +760,7 @@ class TuningSession:
             search_best_values=search_best,
             n_samples_used=n_used,
             wall_s=wall,
+            stage_s=stage_acc,
         )
 
     # -- dataset-served paths (paper section VI.B) ---------------------------
@@ -842,10 +880,17 @@ class TuningSession:
         extra_out = {**self._backend_extra(self.measurement), **dict(extra or {})}
         if self._last_cell_walls:
             # per-cell search cost (sum of unit wall-clocks, parallel or
-            # not), recorded by the work-unit layer; the figure layer plots
+            # not), recorded by the work-unit layer, with the staged
+            # pipeline's compile-vs-measure split; the figure layer plots
             # it alongside result quality (figures.search_cost)
             extra_out["cell_wall_s"] = [
-                {"algo": algo, "sample_size": s, "wall_s": round(w, 3)}
+                {
+                    "algo": algo,
+                    "sample_size": s,
+                    "wall_s": round(w["wall_s"], 3),
+                    "compile_s": round(w.get("compile_s", 0.0), 3),
+                    "measure_s": round(w.get("measure_s", 0.0), 3),
+                }
                 for (algo, s), w in sorted(self._last_cell_walls.items())
             ]
         return RunRecord(
@@ -887,6 +932,7 @@ def tune_matrix(
     resume: bool = False,
     unit_experiments: int | None = None,
     futures_pool=None,
+    pipeline_workers: int | None = None,
     out_dir: str | None = None,
     verbose: bool = False,
     extra: dict | None = None,
@@ -914,6 +960,7 @@ def tune_matrix(
         resume=resume,
         unit_experiments=unit_experiments,
         futures_pool=futures_pool,
+        pipeline_workers=pipeline_workers,
     )
     if out_dir is not None:
         name = (spec.cache_key or spec.default_cache_key()).replace("/", "_")

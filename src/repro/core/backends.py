@@ -51,7 +51,9 @@ class Backend:
     spec can omit its space and records can carry the exact optimum.
     ``serializable`` marks whether specs using this backend can round-trip
     through JSON (a backend whose kwargs hold callables cannot be shipped to
-    shard workers).
+    shard workers).  ``pipeline`` marks whether ``make`` accepts a
+    ``pipeline_workers=`` kwarg (the staged compile-prefetch pipeline); the
+    session driver refuses to silently drop the knob on backends without it.
     """
 
     name: str
@@ -59,6 +61,7 @@ class Backend:
     default_space: Callable[..., SearchSpace] | None = None
     true_optimum: Callable[..., tuple[dict, float]] | None = None
     serializable: bool = True
+    pipeline: bool = False
 
 
 BACKENDS: dict[str, Backend] = {}
@@ -128,6 +131,7 @@ def _make_pallas(
     vmem_limit: int | None = None,
     max_grid: int | None = None,
     validate: bool = True,
+    pipeline_workers: int = 0,
 ) -> BaseMeasurement:
     # lazy import: core must stay importable without jax/pallas_bench
     from ..pallas_bench import (
@@ -152,6 +156,7 @@ def _make_pallas(
         vmem_limit=vmem_limit if vmem_limit is not None else DEFAULT_VMEM_LIMIT,
         max_grid=max_grid if max_grid is not None else DEFAULT_MAX_GRID,
         validate=validate,
+        pipeline_workers=pipeline_workers,
     )
 
 
@@ -240,7 +245,9 @@ register_backend(
     )
 )
 register_backend(
-    Backend(name="pallas", make=_make_pallas, default_space=_pallas_space)
+    Backend(
+        name="pallas", make=_make_pallas, default_space=_pallas_space, pipeline=True
+    )
 )
 register_backend(Backend(name="timing", make=_make_timing, serializable=False))
 register_backend(Backend(name="callable", make=_make_callable, serializable=False))

@@ -287,6 +287,9 @@ class DiskCachedMeasurement(BaseMeasurement):
     def repeats_for(self, config: Config) -> list | None:
         return self._inner.repeats_for(config)
 
+    def stage_times(self) -> dict[str, float]:
+        return self._inner.stage_times()
+
     def reset(self) -> None:
         super().reset()
         self.n_misses = 0

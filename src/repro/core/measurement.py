@@ -18,7 +18,9 @@ config ``final_repeats`` times (paper: 10) and returns the median.
 
 from __future__ import annotations
 
+import threading
 import time
+from contextlib import contextmanager
 from typing import Callable, Protocol, Sequence
 
 import numpy as np
@@ -30,6 +32,41 @@ class Measurement(Protocol):
     def measure(self, config: Config) -> float: ...
     def measure_batch(self, configs: Sequence[Config]) -> np.ndarray: ...
     def measure_final(self, config: Config, repeats: int = 10) -> float: ...
+
+
+class StageClock:
+    """Accumulates wall-clock per named pipeline stage.
+
+    A staged measurement backend (screen -> compile -> time -> record) charges
+    each stage's cost here, so provenance can split "how long did this search
+    take" into "how long did it compile" vs "how long did it measure".  Adds
+    are thread-safe: a compile prefetcher charges the compile stage from pool
+    threads while the main thread charges the timing stage.
+    """
+
+    def __init__(self) -> None:
+        self._acc: dict[str, float] = {}
+        self._lock = threading.Lock()
+
+    @contextmanager
+    def stage(self, name: str):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.add(name, time.perf_counter() - t0)
+
+    def add(self, name: str, seconds: float) -> None:
+        with self._lock:
+            self._acc[name] = self._acc.get(name, 0.0) + float(seconds)
+
+    def times(self) -> dict[str, float]:
+        with self._lock:
+            return dict(self._acc)
+
+    def reset(self) -> None:
+        with self._lock:
+            self._acc.clear()
 
 
 def fence(out) -> None:
@@ -107,6 +144,12 @@ class BaseMeasurement:
     def repeats_for(self, config: Config) -> list | None:
         """Raw per-repeat timings behind the last aggregate for ``config``."""
         return None
+
+    def stage_times(self) -> dict[str, float]:
+        """Per-stage wall-clock (seconds) accumulated since the last reset —
+        staged backends report ``{"screen": ..., "compile": ..., "time": ...}``
+        from their :class:`StageClock`; ``{}`` means the backend is unstaged."""
+        return {}
 
 
 class CallableMeasurement(BaseMeasurement):
@@ -220,6 +263,9 @@ class CachedMeasurement(BaseMeasurement):
 
     def repeats_for(self, config: Config) -> list | None:
         return self._inner.repeats_for(config)
+
+    def stage_times(self) -> dict[str, float]:
+        return self._inner.stage_times()
 
     def reset(self) -> None:
         super().reset()

@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import json
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -111,7 +111,10 @@ class UnitResult:
 
     The arrays cover experiments ``[unit.exp_lo, unit.exp_hi)`` in order.
     JSON-serializable both ways — the remote-executor seam ships these back
-    as plain dicts.
+    as plain dicts.  ``stage_s`` is the unit's per-stage wall-clock breakdown
+    (``{"screen": ..., "compile": ..., "time": ...}``) when the backend is a
+    staged pipeline; ``{}`` for unstaged backends and pre-breakdown journal
+    entries.
     """
 
     unit: ExperimentUnit
@@ -119,6 +122,7 @@ class UnitResult:
     search_best_values: np.ndarray
     n_samples_used: np.ndarray
     wall_s: float = 0.0
+    stage_s: dict = field(default_factory=dict)
 
     def __post_init__(self):
         n = self.unit.n_unit_exp
@@ -138,6 +142,7 @@ class UnitResult:
             "search_best_values": [float(v) for v in self.search_best_values],
             "n_samples_used": [int(v) for v in self.n_samples_used],
             "wall_s": float(self.wall_s),
+            "stage_s": {k: float(v) for k, v in self.stage_s.items()},
         }
 
     @classmethod
@@ -150,7 +155,19 @@ class UnitResult:
             ),
             n_samples_used=np.array(d["n_samples_used"], dtype=np.int64),
             wall_s=float(d.get("wall_s", 0.0)),
+            stage_s={
+                str(k): float(v) for k, v in d.get("stage_s", {}).items()
+            },
         )
+
+
+def _sum_stage_s(weighted) -> dict[str, float]:
+    """Weighted sum of per-stage breakdowns (fragment pro-rating)."""
+    acc: dict[str, float] = {}
+    for stage_s, frac in weighted:
+        for k, v in stage_s.items():
+            acc[k] = acc.get(k, 0.0) + float(v) * frac
+    return acc
 
 
 # ------------------------------------------------------------- decomposition
@@ -210,14 +227,17 @@ def build_units(
 def merge_unit_results(
     cells: list[tuple[str, int, int]],
     results: list[UnitResult],
-) -> tuple[list[CellResult], dict[tuple[str, int], float]]:
+) -> tuple[list[CellResult], dict[tuple[str, int], dict[str, float]]]:
     """Fold unit fragments into full per-cell results, in ``cells`` order.
 
     Fragments merge deterministically by unit key regardless of the order an
     executor returned them in; every cell must be covered contiguously from
     0 to its experiment count or a ``ValueError`` names the gap.  Returns
-    the cell results plus per-cell wall-clock totals (the sum of unit walls
-    — aggregate *search cost*, meaningful even when units ran in parallel).
+    the cell results plus per-cell cost breakdowns ``{"wall_s", "compile_s",
+    "measure_s"}`` (the sum of unit walls — aggregate *search cost*,
+    meaningful even when units ran in parallel; ``compile_s`` charges the
+    staged pipeline's screen + compile stages, ``measure_s`` its timing
+    stage — both 0.0 for unstaged backends).
     """
     by_key: dict[str, UnitResult] = {}
     for r in results:
@@ -228,7 +248,7 @@ def merge_unit_results(
     for r in by_key.values():
         grouped.setdefault(r.unit.cell, []).append(r)
     out: list[CellResult] = []
-    walls: dict[tuple[str, int], float] = {}
+    walls: dict[tuple[str, int], dict[str, float]] = {}
     for algo, s, e in cells:
         frags = sorted(grouped.get((algo, s), []), key=lambda r: r.unit.exp_lo)
         covered = 0
@@ -256,7 +276,18 @@ def merge_unit_results(
                 ),
             )
         )
-        walls[(algo, s)] = float(sum(f.wall_s for f in frags))
+        walls[(algo, s)] = {
+            "wall_s": float(sum(f.wall_s for f in frags)),
+            "compile_s": float(
+                sum(
+                    f.stage_s.get("screen", 0.0) + f.stage_s.get("compile", 0.0)
+                    for f in frags
+                )
+            ),
+            "measure_s": float(
+                sum(f.stage_s.get("time", 0.0) for f in frags)
+            ),
+        }
     return out, walls
 
 
@@ -340,7 +371,8 @@ class UnitJournal:
         fragments journaled under DIFFERENT unit boundaries (a run resumed
         with a different ``max_workers`` re-splits its cells; per-experiment
         results are positional, so fragments slice and concatenate).
-        ``wall_s`` of partially-used fragments is pro-rated."""
+        ``wall_s`` and ``stage_s`` of partially-used fragments are
+        pro-rated."""
         exact = self.get(unit)
         if exact is not None:
             return exact
@@ -374,6 +406,9 @@ class UnitJournal:
                 [b.n_samples_used[s] for b, s, _ in pieces]
             ),
             wall_s=float(sum(b.wall_s * frac for b, _, frac in pieces)),
+            stage_s=_sum_stage_s(
+                (b.stage_s, frac) for b, _, frac in pieces
+            ),
         )
 
     def partition(

@@ -1,26 +1,36 @@
 """Compile-and-time measurement of real ``pl.pallas_call`` kernels.
 
 :class:`PallasMeasurement` is the objective function the ISSUE's real-
-measurement path plugs into the batched ask/tell engine:
+measurement path plugs into the batched ask/tell engine.  Measurement is a
+staged pipeline — **screen → compile → time → record** — with each stage a
+method of its own and a :class:`~repro.core.measurement.StageClock` charging
+per-stage wall-clock into provenance (``screen_s`` / ``compile_s`` /
+``time_s``), so the analysis layer can split search cost into "compiling"
+vs "measuring":
 
+* **screen** — the validity pre-screen (:mod:`.validity`) rejects bad
+  geometries before any compile; failures become structured
+  :class:`~repro.pallas_bench.validity.InvalidMeasurement` penalties
+  (``float("inf")`` through the ordinary ``tell`` path, kernel_tuner-style)
+  whose reasons survive into the measurement store.
 * **compile once per geometry** — a keyed compilation cache maps each
   distinct kernel geometry to its warmed, ready-to-time callable.  Configs
   that lower to the same program (today: any two configs differing only in
-  ``w_z``, which the Mosaic pipeliner owns) share one cache entry, so the
-  searcher revisiting a geometry never pays tracing/lowering again.
+  ``w_z``, which the Mosaic pipeliner owns) share one cache entry.
   ``n_compiles`` counts actual compilations — the figure a warm disk cache
-  drives to zero.
+  drives to zero.  With ``pipeline_workers > 0``, ``measure_batch`` runs
+  two-phase: a *compile phase* resolves the whole batch's geometry keys
+  through a thread-pool prefetcher (upcoming geometries compile while the
+  device times the current config), then the *timing phase* walks the batch
+  strictly sequentially — device measurements never overlap each other, only
+  host-side compilation overlaps them.  ``pipeline_workers=0`` (default) is
+  byte-for-byte today's inline path.
 * **warmup + N-repeat timing** — every measurement runs ``warmup`` fenced
   calls (the compile call counts as the first), then ``repeats`` timed calls,
   each fenced with ``jax.block_until_ready`` INSIDE the timed region (the
   analogue of the paper timing after H2D and before D2H).  The robust
   aggregate is the median; all repeats are recorded (``repeats_for``) so the
   run record can carry the raw distribution.
-* **failures become penalties** — the validity pre-screen and any
-  compile/run exception map to a structured
-  :class:`~repro.pallas_bench.validity.InvalidMeasurement`:
-  the searcher sees ``float("inf")`` through the ordinary ``tell`` path
-  (kernel_tuner-style) and the reason survives into the measurement store.
 
 On CPU the kernels run in Pallas interpret mode (``kernels.common
 .use_interpret``); on a real TPU the same ``pallas_call`` lowers to Mosaic
@@ -30,12 +40,14 @@ with no change here — only the provenance dict's ``interpret``/
 
 from __future__ import annotations
 
+import threading
 import time
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable, Sequence
 
 import numpy as np
 
-from ..core.measurement import BaseMeasurement, fence
+from ..core.measurement import BaseMeasurement, StageClock, fence
 from ..core.engine import config_key
 from ..kernels.common import Config, geometry_from_config
 from .validity import (
@@ -53,8 +65,12 @@ class PallasMeasurement(BaseMeasurement):
     ``repeats``/``warmup`` follow the kernel_tuner defaults (time several
     runs, keep a robust aggregate).  ``validate=False`` disables the
     pre-screen (compile/run failures are still caught) — useful to audit the
-    screen itself.  ``seed`` is accepted for backend-factory uniformity;
-    wall-clock timing has no noise stream to seed.
+    screen itself.  ``pipeline_workers=N`` enables the batch compile
+    prefetcher (N pool threads); 0 keeps the inline compile-then-time loop.
+    ``timer`` is the timing-stage clock (default ``time.perf_counter``) —
+    injectable so tests can prove pipeline on/off equivalence on
+    deterministic timestamps.  ``seed`` is accepted for backend-factory
+    uniformity; wall-clock timing has no noise stream to seed.
     """
 
     def __init__(
@@ -66,18 +82,34 @@ class PallasMeasurement(BaseMeasurement):
         vmem_limit: int = DEFAULT_VMEM_LIMIT,
         max_grid: int = DEFAULT_MAX_GRID,
         validate: bool = True,
+        pipeline_workers: int = 0,
+        timer: Callable[[], float] | None = None,
     ):
         super().__init__()
         if repeats < 1:
             raise ValueError("repeats must be >= 1")
+        if pipeline_workers < 0:
+            raise ValueError("pipeline_workers must be >= 0")
         self.workload = workload
         self.repeats = int(repeats)
         self.warmup = int(warmup)
         self.vmem_limit = int(vmem_limit)
         self.max_grid = int(max_grid)
         self.validate = validate
+        self.pipeline_workers = int(pipeline_workers)
+        self._timer = timer if timer is not None else time.perf_counter
+        #: per-stage wall-clock (screen / compile / time), per run — reset()
+        #: zeroes it together with the per-run counters below
+        self.clock = StageClock()
+        #: lifetime compile count == compilation-cache fills (the cache
+        #: survives reset() by design, and so does this)
         self.n_compiles = 0
+        #: per-run counters — what provenance reports, so a later matrix
+        #: cell reusing this instance never over-reports earlier cells' work
+        self.run_compiles = 0
+        self._run_invalid: set[str] = set()
         #: config_key -> InvalidMeasurement for every penalized config served
+        #: (lifetime, like the compile cache: reasons stay addressable)
         self.invalid: dict[str, InvalidMeasurement] = {}
         #: config_key -> per-repeat seconds of the last search measurement
         self.repeat_log: dict[str, list[float]] = {}
@@ -87,6 +119,10 @@ class PallasMeasurement(BaseMeasurement):
         #: geometry key -> warmed callable (or InvalidMeasurement for a
         #: geometry whose compile failed — retrying would fail identically)
         self._compiled: dict[tuple, Callable | InvalidMeasurement] = {}
+        #: geometry key -> in-flight prefetch compile (pipelined batches)
+        self._inflight: dict[tuple, Future] = {}
+        self._cache_lock = threading.RLock()
+        self._pool: ThreadPoolExecutor | None = None
 
     # -- compilation cache -----------------------------------------------------
     def _geom_key(self, cfg: Config) -> tuple:
@@ -101,21 +137,22 @@ class PallasMeasurement(BaseMeasurement):
             return cfg
         return {**cfg, "w_z": 1}
 
-    def _get_compiled(self, cfg: Config) -> Callable | InvalidMeasurement:
-        """Warmed zero-arg runner for cfg's geometry, compiling on first use."""
-        gkey = self._geom_key(cfg)
-        hit = self._compiled.get(gkey)
-        if hit is not None:
-            return hit
-        if self._inputs is None:
-            self._inputs = self.workload.materialize()
-        inputs, run_cfg = self._inputs, self._run_config(cfg)
+    def _compile_now(self, cfg: Config, gkey: tuple) -> Callable | InvalidMeasurement:
+        """Trace + lower + warm cfg's geometry, populating the cache.  Called
+        from the main thread (inline path) or a prefetch pool thread; all
+        shared state mutates under the cache lock."""
+        with self._cache_lock:
+            if self._inputs is None:
+                self._inputs = self.workload.materialize()
+            inputs = self._inputs
+            self.n_compiles += 1
+            self.run_compiles += 1
+        run_cfg = self._run_config(cfg)
 
         def fn():
             return self.workload.run(inputs, run_cfg)
 
         try:
-            self.n_compiles += 1
             fence(fn())                       # trace + lower + first run
             for _ in range(max(0, self.warmup - 1)):
                 fence(fn())
@@ -123,51 +160,129 @@ class PallasMeasurement(BaseMeasurement):
             bad = InvalidMeasurement(
                 reason=f"{type(e).__name__}: {e}", stage="compile"
             )
-            self._compiled[gkey] = bad
+            with self._cache_lock:
+                self._compiled[gkey] = bad
             return bad
-        self._compiled[gkey] = fn
+        with self._cache_lock:
+            self._compiled[gkey] = fn
         return fn
 
-    # -- timing ----------------------------------------------------------------
-    def _timed_repeats(self, fn: Callable, repeats: int) -> list[float] | InvalidMeasurement:
-        times = []
-        for _ in range(repeats):
-            try:
-                t0 = time.perf_counter()
-                fence(fn())
-                times.append(time.perf_counter() - t0)
-            except Exception as e:  # noqa: BLE001 — runtime failure -> penalty
-                return InvalidMeasurement(
-                    reason=f"{type(e).__name__}: {e}", stage="run"
-                )
-        return times
-
-    def _measure_repeats(self, config: Config, repeats: int) -> list[float] | InvalidMeasurement:
-        if self.validate:
+    # -- pipeline stages -------------------------------------------------------
+    def _stage_screen(self, config: Config) -> InvalidMeasurement | None:
+        """Validity pre-screen; ``None`` means the config may compile."""
+        if not self.validate:
+            return None
+        with self.clock.stage("screen"):
             reason = validate_config(
                 self.workload, config, self.vmem_limit, self.max_grid
             )
-            if reason is not None:
-                return InvalidMeasurement(reason=reason, stage="validity")
-        fn = self._get_compiled(config)
-        if isinstance(fn, InvalidMeasurement):
-            return fn
-        return self._timed_repeats(fn, repeats)
+        if reason is None:
+            return None
+        return InvalidMeasurement(reason=reason, stage="validity")
 
-    def _measure_one(self, config: Config) -> float:
-        key = config_key(config)
-        out = self._measure_repeats(config, self.repeats)
+    def _stage_compile(self, config: Config) -> Callable | InvalidMeasurement:
+        """Warmed zero-arg runner for cfg's geometry: cache hit, prefetched
+        compile (pipelined batches), or inline compile on first use."""
+        gkey = self._geom_key(config)
+        with self._cache_lock:
+            hit = self._compiled.get(gkey)
+            fut = None if hit is not None else self._inflight.pop(gkey, None)
+        if hit is not None:
+            return hit
+        if fut is not None:
+            # the pool thread charged the compile stage; waiting here is the
+            # pipeline's (ideally zero) bubble
+            return fut.result()
+        with self.clock.stage("compile"):
+            return self._compile_now(config, gkey)
+
+    def _stage_time(
+        self, fn: Callable, repeats: int
+    ) -> list[float] | InvalidMeasurement:
+        """Strictly sequential fenced timing — never overlapped, so device
+        measurements stay honest even while the prefetcher compiles."""
+        times = []
+        with self.clock.stage("time"):
+            for _ in range(repeats):
+                try:
+                    t0 = self._timer()
+                    fence(fn())
+                    times.append(self._timer() - t0)
+                except Exception as e:  # noqa: BLE001 — runtime failure -> penalty
+                    return InvalidMeasurement(
+                        reason=f"{type(e).__name__}: {e}", stage="run"
+                    )
+        return times
+
+    def _stage_record(
+        self,
+        key: str,
+        out: list[float] | InvalidMeasurement,
+        log: dict[str, list[float]],
+    ) -> float:
+        """Fold a stage-pipeline outcome into the served value + the logs."""
         if isinstance(out, InvalidMeasurement):
             self.invalid[key] = out
+            self._run_invalid.add(key)
             return out.penalty
-        self.repeat_log[key] = out
+        log[key] = out
         return float(np.median(out))
 
+    def _measure_repeats(
+        self, config: Config, repeats: int
+    ) -> list[float] | InvalidMeasurement:
+        bad = self._stage_screen(config)
+        if bad is not None:
+            return bad
+        fn = self._stage_compile(config)
+        if isinstance(fn, InvalidMeasurement):
+            return fn
+        return self._stage_time(fn, repeats)
+
+    def _measure_one(self, config: Config) -> float:
+        return self._stage_record(
+            config_key(config),
+            self._measure_repeats(config, self.repeats),
+            self.repeat_log,
+        )
+
+    # -- the two-phase batch path ----------------------------------------------
+    def _prefetch_compiles(self, configs: Sequence[Config]) -> None:
+        """Compile phase: submit every geometry this batch will compile to
+        the pool, in batch order.  Only configs that pass the pre-screen are
+        prefetched (the inline path never compiles a screened-out config),
+        so ``n_compiles`` is identical with the pipeline on or off."""
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.pipeline_workers,
+                thread_name_prefix="pallas-compile",
+            )
+        for cfg in configs:
+            if self.validate and validate_config(
+                self.workload, cfg, self.vmem_limit, self.max_grid
+            ) is not None:
+                continue
+            gkey = self._geom_key(cfg)
+            with self._cache_lock:
+                if gkey in self._compiled or gkey in self._inflight:
+                    continue
+                self._inflight[gkey] = self._pool.submit(
+                    self._prefetch_task, dict(cfg), gkey
+                )
+
+    def _prefetch_task(self, cfg: Config, gkey: tuple):
+        with self.clock.stage("compile"):
+            return self._compile_now(cfg, gkey)
+
     def measure_batch(self, configs: Sequence[Config]) -> np.ndarray:
-        """One Python-level dispatch per batch; kernels still execute
-        sequentially (device timing must not overlap)."""
+        """One Python-level dispatch per batch.  With ``pipeline_workers``
+        set, the batch runs two-phase — compile prefetch, then timing —
+        but the timing phase itself walks configs strictly sequentially
+        (device measurements must not overlap each other)."""
         self.n_samples += len(configs)
         self.n_dispatches += 1
+        if self.pipeline_workers > 0 and len(configs) > 1:
+            self._prefetch_compiles(configs)
         return np.array(
             [float(self._measure_one(c)) for c in configs], dtype=np.float64
         )
@@ -175,13 +290,24 @@ class PallasMeasurement(BaseMeasurement):
     def measure_final(self, config: Config, repeats: int = 10) -> float:
         """Paper protocol: the winner re-measured ``repeats`` times, median
         kept; raw repeats land in ``final_repeat_log`` for the run record."""
-        key = config_key(config)
-        out = self._measure_repeats(config, repeats)
-        if isinstance(out, InvalidMeasurement):
-            self.invalid[key] = out
-            return out.penalty
-        self.final_repeat_log[key] = out
-        return float(np.median(out))
+        return self._stage_record(
+            config_key(config),
+            self._measure_repeats(config, repeats),
+            self.final_repeat_log,
+        )
+
+    def close(self) -> None:
+        """Shut the prefetch pool down (idempotent; the pool is rebuilt on
+        the next pipelined batch if the instance keeps measuring)."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def __del__(self):  # pragma: no cover — interpreter-exit ordering
+        try:
+            self.close()
+        except Exception:  # noqa: BLE001
+            pass
 
     # -- introspection (RunRecord provenance, disk-cache metadata) ------------
     def reason_for(self, config: Config) -> str | None:
@@ -192,13 +318,20 @@ class PallasMeasurement(BaseMeasurement):
         key = config_key(config)
         return self.final_repeat_log.get(key) or self.repeat_log.get(key)
 
+    def stage_times(self) -> dict[str, float]:
+        return self.clock.times()
+
     def provenance(self) -> dict:
         """Backend provenance for the versioned RunRecord: how timings were
         taken and on what — the fields that distinguish an interpret-mode CPU
-        run from a real-TPU run of the same spec."""
+        run from a real-TPU run of the same spec.  Counters are per-run
+        (since the last ``reset()``): a later matrix cell reports its own
+        compiles/penalties, not lifetime totals; ``n_compiles_total`` keeps
+        the lifetime figure (== compilation-cache fills)."""
         import jax
 
         dev = jax.devices()[0]
+        stage_s = {k: round(v, 6) for k, v in self.clock.times().items()}
         return {
             "backend": "pallas",
             "kernel": self.workload.name,
@@ -211,14 +344,20 @@ class PallasMeasurement(BaseMeasurement):
             "repeats": self.repeats,
             "warmup": self.warmup,
             "timer": "perf_counter",
-            "n_compiles": self.n_compiles,
-            "n_invalid": len(self.invalid),
+            "pipeline_workers": self.pipeline_workers,
+            "stage_s": stage_s,
+            "n_compiles": self.run_compiles,
+            "n_compiles_total": self.n_compiles,
+            "n_invalid": len(self._run_invalid),
         }
 
     def reset(self) -> None:
-        """Clear counters and logs; the compilation cache survives (compiled
+        """Clear per-run counters, logs, and stage clocks; the compilation
+        cache — and its lifetime ``n_compiles`` — survives (compiled
         programs are still valid — that is the point of the cache)."""
         super().reset()
-        self.invalid.clear()
+        self.run_compiles = 0
+        self._run_invalid.clear()
         self.repeat_log.clear()
         self.final_repeat_log.clear()
+        self.clock.reset()

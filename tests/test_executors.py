@@ -110,7 +110,9 @@ def test_merge_detects_gaps_and_duplicates():
                    search_best_values=np.ones(2), n_samples_used=np.ones(2))
     merged, walls = merge_unit_results(cells, [b, a])   # order-insensitive
     assert len(merged) == 1 and len(merged[0].final_values) == 4
-    assert walls[("ga", 25)] == a.wall_s + b.wall_s
+    assert walls[("ga", 25)]["wall_s"] == a.wall_s + b.wall_s
+    assert walls[("ga", 25)]["compile_s"] == 0.0   # unstaged: no breakdown
+    assert walls[("ga", 25)]["measure_s"] == 0.0
     with pytest.raises(ValueError, match="duplicate unit"):
         merge_unit_results(cells, [a, a, b])
     with pytest.raises(ValueError, match="coverage gap|covered only"):
@@ -118,7 +120,7 @@ def test_merge_detects_gaps_and_duplicates():
 
 
 def test_executor_registry():
-    assert {"serial", "process", "futures"} <= set(EXECUTORS)
+    assert {"serial", "process", "futures", "device"} <= set(EXECUTORS)
     assert repro.EXECUTORS is EXECUTORS
     with pytest.raises(KeyError, match="unknown executor"):
         run_units("warp", ExecutionPlan(session=None))
@@ -367,11 +369,16 @@ def test_cell_wall_clock_lands_in_record_and_figures(tmp_path):
         ("rs", 25), ("rf", 25), ("ga", 25)
     }
     assert all(w["wall_s"] >= 0 for w in walls)
+    # the costmodel backend is unstaged: breakdown columns exist but are 0
+    assert all(w["compile_s"] == 0.0 and w["measure_s"] == 0.0 for w in walls)
 
     import sys
     sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
     from benchmarks.figures import load_all, render_grid, search_cost
 
     table = search_cost(load_all(out))
-    assert table[("harris", "v5e")]["ga"][25] >= 0
-    assert "search cost" in render_grid(table, fmt="{:.2f}s", title="search cost")
+    cell = table[("harris", "v5e")]["ga"][25]
+    assert cell["wall"] >= 0 and cell["compile"] == 0.0 and cell["measure"] == 0.0
+    assert "search cost" in render_grid(
+        table, fmt="{0[wall]:.2f}s", title="search cost"
+    )
