@@ -3,7 +3,7 @@
 # themselves when absent).
 PYTHON ?= python
 
-.PHONY: test test-fast bench lint install-dev smoke-pallas smoke-matrix smoke-device docs-check report
+.PHONY: test test-fast bench lint staticcheck install-dev smoke-pallas smoke-matrix smoke-device docs-check report
 
 test:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q
@@ -57,6 +57,13 @@ docs-check:
 
 lint:
 	ruff check src tests benchmarks examples tools
+
+# tier-1: the determinism/provenance/registry static gate (docs/static_analysis.md)
+# — AST + registry pass over src, then the spec-level pre-flight on the
+# full paper matrix
+staticcheck:
+	PYTHONPATH=src $(PYTHON) -m repro.staticcheck src
+	PYTHONPATH=src $(PYTHON) -m repro.staticcheck --preflight-paper
 
 test-fast:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q tests/test_space.py tests/test_searchers.py tests/test_costmodel.py tests/test_stats.py tests/test_surrogates.py

@@ -42,15 +42,20 @@ DEFAULT_CELLS = (
     "yi-34b:train_4k",             # canonical dense LM (paper-representative)
 )
 
+def _variant(cast_bf16=False, moe_constrain=False, head_dim_tp=False, fsdp_gather=False):
+    return dict(cast_bf16=cast_bf16, moe_constrain=moe_constrain,
+                head_dim_tp=head_dim_tp, fsdp_gather=fsdp_gather)
+
+
 VARIANTS = {
-    "baseline": dict(cast_bf16=False, moe_constrain=False, head_dim_tp=False, fsdp_gather=False),
-    "H1_bf16gather": dict(cast_bf16=True, moe_constrain=False, head_dim_tp=False, fsdp_gather=False),
-    "H2_moe_dispatch": dict(cast_bf16=False, moe_constrain=True, head_dim_tp=False, fsdp_gather=False),
-    "H1+H2": dict(cast_bf16=True, moe_constrain=True, head_dim_tp=False, fsdp_gather=False),
-    "H1+H3_headdim": dict(cast_bf16=True, moe_constrain=False, head_dim_tp=True, fsdp_gather=False),
-    "H1+H2+H3": dict(cast_bf16=True, moe_constrain=True, head_dim_tp=True, fsdp_gather=False),
-    "H4_fsdp_gather": dict(cast_bf16=False, moe_constrain=False, head_dim_tp=False, fsdp_gather=True),
-    "H4+H3": dict(cast_bf16=False, moe_constrain=False, head_dim_tp=True, fsdp_gather=True),
+    "baseline": _variant(),
+    "H1_bf16gather": _variant(cast_bf16=True),
+    "H2_moe_dispatch": _variant(moe_constrain=True),
+    "H1+H2": _variant(cast_bf16=True, moe_constrain=True),
+    "H1+H3_headdim": _variant(cast_bf16=True, head_dim_tp=True),
+    "H1+H2+H3": _variant(cast_bf16=True, moe_constrain=True, head_dim_tp=True),
+    "H4_fsdp_gather": _variant(fsdp_gather=True),
+    "H4+H3": _variant(head_dim_tp=True, fsdp_gather=True),
 }
 
 

@@ -26,6 +26,7 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(ROOT, "src"))
 sys.path.insert(0, ROOT)
 
+from benchmarks.paper_matrix import BENCHMARKS, CHIP_NAMES, combo_path, run_combo
 from repro.analysis import load_all, validate
 from repro.analysis.stats import (
     fig2_pct_optimum,
@@ -34,8 +35,6 @@ from repro.analysis.stats import (
     fig4b_cles,
 )
 from repro.core import ExperimentDesign, TuningSession, TuningSpec
-
-from benchmarks.paper_matrix import BENCHMARKS, CHIP_NAMES, combo_path, run_combo
 
 
 def ensure_matrix(out_dir: str, budget: int, shards: int = 1) -> str:

@@ -86,7 +86,7 @@ def fig_speedup_vs_sample_size(
     )
     for ax in axes.flat[len(keys):]:
         ax.set_visible(False)
-    for ax, key in zip(axes.flat, keys):
+    for ax, key in zip(axes.flat, keys, strict=False):
         bench, chip = key
         for algo in ALGOS:
             if algo not in table[key]:
@@ -115,7 +115,7 @@ def fig_speedup_vs_sample_size(
     by_label = {}
     for ax in axes.flat:
         handles, labels = ax.get_legend_handles_labels()
-        by_label.update(zip(labels, handles))
+        by_label.update(zip(labels, handles, strict=True))
     if by_label:
         fig.legend(by_label.values(), by_label.keys(), loc="upper center",
                    ncol=len(by_label), frameon=False, fontsize=8,

@@ -1,16 +1,16 @@
 """Assigned-architecture registry: ``--arch <id>`` resolves here."""
 
 from .base import SHAPES, ArchConfig, ShapeCfg, applicable_shapes
-from .yi_34b import CONFIG as YI_34B
-from .granite_34b import CONFIG as GRANITE_34B
-from .phi3_medium_14b import CONFIG as PHI3_MEDIUM_14B
-from .deepseek_coder_33b import CONFIG as DEEPSEEK_CODER_33B
-from .whisper_medium import CONFIG as WHISPER_MEDIUM
-from .zamba2_1_2b import CONFIG as ZAMBA2_1_2B
-from .olmoe_1b_7b import CONFIG as OLMOE_1B_7B
-from .deepseek_v2_236b import CONFIG as DEEPSEEK_V2_236B
-from .mamba2_130m import CONFIG as MAMBA2_130M
 from .chameleon_34b import CONFIG as CHAMELEON_34B
+from .deepseek_coder_33b import CONFIG as DEEPSEEK_CODER_33B
+from .deepseek_v2_236b import CONFIG as DEEPSEEK_V2_236B
+from .granite_34b import CONFIG as GRANITE_34B
+from .mamba2_130m import CONFIG as MAMBA2_130M
+from .olmoe_1b_7b import CONFIG as OLMOE_1B_7B
+from .phi3_medium_14b import CONFIG as PHI3_MEDIUM_14B
+from .whisper_medium import CONFIG as WHISPER_MEDIUM
+from .yi_34b import CONFIG as YI_34B
+from .zamba2_1_2b import CONFIG as ZAMBA2_1_2B
 
 REGISTRY: dict[str, ArchConfig] = {
     c.name: c

@@ -2,41 +2,7 @@
 autotuning with RS / RF / GA / BO-GP / BO-TPE searchers, the MWU + CLES
 statistics layer, and the declarative ``tune()`` facade on top."""
 
-from .space import Config, Param, SearchSpace, paper_space
-from .measurement import (
-    BaseMeasurement,
-    CachedMeasurement,
-    CallableMeasurement,
-    StageClock,
-    TimingMeasurement,
-)
-from .engine import (
-    DiskCachedMeasurement,
-    MeasurementStore,
-    config_key,
-    drive,
-)
-from .stores import STORES, SqliteMeasurementStore, make_store
-from .backends import BACKENDS, Backend, make_measurement, register_backend
-from .experiment import ExperimentDesign
-from .dataset import SampleDataset
-from .runner import CellResult, MatrixResults, stable_seed
-from .workunits import (
-    ExperimentUnit,
-    UnitJournal,
-    UnitResult,
-    build_units,
-    merge_unit_results,
-)
-from .executors import EXECUTORS, Executor, register_executor
-from .searchers import (
-    EXTRA_ALGORITHMS,
-    PAPER_ALGORITHMS,
-    SEARCHERS,
-    Searcher,
-    TuningResult,
-    make_searcher,
-)
+from . import stats
 from .api import (
     RunRecord,
     TuningSession,
@@ -45,7 +11,36 @@ from .api import (
     tune,
     tune_matrix,
 )
-from . import stats
+from .backends import BACKENDS, Backend, make_measurement, register_backend
+from .dataset import SampleDataset
+from .engine import DiskCachedMeasurement, MeasurementStore, config_key, drive
+from .executors import EXECUTORS, Executor, register_executor
+from .experiment import ExperimentDesign
+from .measurement import (
+    BaseMeasurement,
+    CachedMeasurement,
+    CallableMeasurement,
+    StageClock,
+    TimingMeasurement,
+)
+from .runner import CellResult, MatrixResults, stable_seed
+from .searchers import (
+    EXTRA_ALGORITHMS,
+    PAPER_ALGORITHMS,
+    SEARCHERS,
+    Searcher,
+    TuningResult,
+    make_searcher,
+)
+from .space import Config, Param, SearchSpace, paper_space
+from .stores import STORES, SqliteMeasurementStore, make_store
+from .workunits import (
+    ExperimentUnit,
+    UnitJournal,
+    UnitResult,
+    build_units,
+    merge_unit_results,
+)
 
 __all__ = [
     "Config",

@@ -43,7 +43,6 @@ import json
 import os
 import platform
 import socket
-import time
 import warnings
 from dataclasses import dataclass, field, replace
 from datetime import datetime, timezone
@@ -52,6 +51,7 @@ from typing import Callable
 import numpy as np
 
 from .backends import BACKENDS, make_measurement
+from .clock import monotonic
 from .dataset import SampleDataset
 from .engine import DISPATCH_MODES, DiskCachedMeasurement, drive
 from .executors import EXECUTORS, ExecutionPlan, recover_shard_stores, run_units
@@ -314,7 +314,11 @@ class TuningSpec:
 
 def _provenance(wall_s: float | None = None) -> dict:
     p = {
-        "created_at": datetime.now(timezone.utc).isoformat(timespec="seconds"),
+        # a provenance timestamp SHOULD be the real wall clock; results never
+        # read it back
+        "created_at": datetime.now(timezone.utc).isoformat(  # repro: allow[DET001]
+            timespec="seconds"
+        ),
         "hostname": socket.gethostname(),
         "platform": platform.platform(),
         "python": platform.python_version(),
@@ -483,7 +487,7 @@ class TuningSession:
         if spec.budget is None:
             raise ValueError("TuningSpec.budget is required for tune(); "
                             "use tune_matrix() for design-driven runs")
-        t0 = time.time()
+        t0 = monotonic()
         searcher = make_searcher(
             spec.searcher, self.space, seed=spec.seed, **spec.searcher_kwargs
         )
@@ -510,7 +514,7 @@ class TuningSession:
             kind="tune",
             spec=self._spec_dict_or_repr(),
             result=res,
-            provenance=_provenance(time.time() - t0),
+            provenance=_provenance(monotonic() - t0),
             extra=self._backend_extra(measurement),
         )
         return result
@@ -562,7 +566,7 @@ class TuningSession:
         wall-clock, not results, so caches and journals stay valid across
         it).
         """
-        t0 = time.time()
+        t0 = monotonic()
         if pipeline_workers is not None:
             if not self._backend.pipeline:
                 raise ValueError(
@@ -641,7 +645,7 @@ class TuningSession:
         for cell in cell_results:
             results.add(cell)
         self.save_store()
-        self.last_record = self.make_record(results, wall_s=time.time() - t0)
+        self.last_record = self.make_record(results, wall_s=monotonic() - t0)
         return results
 
     # -- the work-unit layer --------------------------------------------------
@@ -705,7 +709,7 @@ class TuningSession:
         bit-identical to the monolithic per-cell loop.
         """
         spec = self.spec
-        t0 = time.perf_counter()
+        t0 = monotonic()
         dataset = self._get_dataset()
         n = unit.n_unit_exp
         finals = np.empty(n)
@@ -746,7 +750,7 @@ class TuningSession:
             # report {} and the unit carries no breakdown
             for k, v in measurement.stage_times().items():
                 stage_acc[k] = stage_acc.get(k, 0.0) + float(v)
-        wall = time.perf_counter() - t0
+        wall = monotonic() - t0
         if self.verbose:
             print(
                 f"[session] {unit.algo:7s} S={unit.sample_size:4d} "
@@ -952,7 +956,7 @@ def tune_matrix(
     the backend's true optimum, when it can compute one) next to it.
     """
     session = TuningSession(spec, verbose=verbose)
-    t0 = time.time()
+    t0 = monotonic()
     results = session.run_matrix(
         shards=shards,
         executor=executor,
@@ -969,7 +973,7 @@ def tune_matrix(
         results.save(os.path.join(out_dir, artifact))
         record = session.make_record(
             results,
-            wall_s=time.time() - t0,
+            wall_s=monotonic() - t0,
             artifact=artifact,
             extra=extra,
             with_optimum=True,

@@ -30,13 +30,13 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable
 
+from .engine import DiskCachedMeasurement
 from .measurement import (
     BaseMeasurement,
     CachedMeasurement,
     CallableMeasurement,
     TimingMeasurement,
 )
-from .engine import DiskCachedMeasurement
 from .space import SearchSpace
 
 
@@ -161,7 +161,13 @@ def _make_pallas(
 
 
 def _pallas_space(kernel: str = "add", **kwargs) -> SearchSpace:
-    from ..pallas_bench import DEFAULT_MAX_GRID, DEFAULT_VMEM_LIMIT, DEFAULT_X, DEFAULT_Y, default_space
+    from ..pallas_bench import (
+        DEFAULT_MAX_GRID,
+        DEFAULT_VMEM_LIMIT,
+        DEFAULT_X,
+        DEFAULT_Y,
+        default_space,
+    )
 
     return default_space(
         kernel,

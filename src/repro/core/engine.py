@@ -23,8 +23,8 @@ from typing import Sequence
 import numpy as np
 
 from .measurement import BaseMeasurement
-from .space import Config
 from .searchers.base import Searcher, TuningResult
+from .space import Config
 
 DISPATCH_MODES = ("batch", "one")
 
@@ -252,7 +252,7 @@ class DiskCachedMeasurement(BaseMeasurement):
                 fresh = self._inner.measure_batch(fresh_cfgs)
                 self.n_misses += len(fresh_cfgs)
                 vals[i:j] = fresh
-                for k, c, v in zip(keys[i:j], fresh_cfgs, fresh):
+                for k, c, v in zip(keys[i:j], fresh_cfgs, fresh, strict=True):
                     self._record(k, c, float(v))
             else:
                 self._inner.skip_samples(j - i)

@@ -68,7 +68,7 @@ class ExperimentDesign:
 
     @property
     def total_search_samples(self) -> int:
-        return sum(s * e for s, e in zip(self.sample_sizes, self.n_experiments))
+        return sum(s * e for s, e in zip(self.sample_sizes, self.n_experiments, strict=True))
 
     def rows(self):
-        return list(zip(self.sample_sizes, self.n_experiments))
+        return list(zip(self.sample_sizes, self.n_experiments, strict=True))

@@ -19,12 +19,12 @@ config ``final_repeats`` times (paper: 10) and returns the median.
 from __future__ import annotations
 
 import threading
-import time
 from contextlib import contextmanager
 from typing import Callable, Protocol, Sequence
 
 import numpy as np
 
+from .clock import monotonic
 from .space import Config
 
 
@@ -50,11 +50,11 @@ class StageClock:
 
     @contextmanager
     def stage(self, name: str):
-        t0 = time.perf_counter()
+        t0 = monotonic()
         try:
             yield
         finally:
-            self.add(name, time.perf_counter() - t0)
+            self.add(name, monotonic() - t0)
 
     def add(self, name: str, seconds: float) -> None:
         with self._lock:
@@ -196,9 +196,9 @@ class TimingMeasurement(BaseMeasurement):
             for _ in range(self._warmup):
                 fence(self._runner(config))
             self._warmed.add(k)
-        t0 = time.perf_counter()
+        t0 = monotonic()
         fence(self._runner(config))
-        return time.perf_counter() - t0
+        return monotonic() - t0
 
 
 class CachedMeasurement(BaseMeasurement):
@@ -235,7 +235,7 @@ class CachedMeasurement(BaseMeasurement):
         fresh_keys: list = []
         fresh_cfgs: list = []
         seen_fresh: set = set()
-        for k, c in zip(keys, configs):
+        for k, c in zip(keys, configs, strict=True):
             if k not in self._cache and k not in seen_fresh:
                 seen_fresh.add(k)
                 fresh_keys.append(k)
@@ -243,7 +243,7 @@ class CachedMeasurement(BaseMeasurement):
         if fresh_cfgs:
             vals = self._inner.measure_batch(fresh_cfgs)
             self.n_samples += len(fresh_cfgs)
-            self._cache.update(zip(fresh_keys, (float(v) for v in vals)))
+            self._cache.update(zip(fresh_keys, (float(v) for v in vals), strict=True))
         return np.array([self._cache[k] for k in keys], dtype=np.float64)
 
     def _measure_one(self, config: Config) -> float:

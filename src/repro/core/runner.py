@@ -65,7 +65,8 @@ class MatrixResults:
             arrays[f"search_{i}"] = cell.search_best_values
             arrays[f"nsamp_{i}"] = cell.n_samples_used
             meta.append({"algo": algo, "sample_size": s, "index": i})
-        np.savez_compressed(path, meta=json.dumps({"cells": meta, "optimum": self.optimum}), **arrays)
+        meta_json = json.dumps({"cells": meta, "optimum": self.optimum})
+        np.savez_compressed(path, meta=meta_json, **arrays)
 
     @classmethod
     def load(cls, path: str) -> "MatrixResults":

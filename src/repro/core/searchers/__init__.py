@@ -1,12 +1,12 @@
+from .annealing import SimulatedAnnealing
 from .base import SEARCHERS, Searcher, TuningResult, make_searcher, register
-from .random_search import RandomSearch
-from .random_forest import RandomForestSearcher
-from .genetic import GeneticAlgorithm
 from .bo_gp import BOGPSearcher
 from .bo_tpe import BOTPESearcher
-from .annealing import SimulatedAnnealing
-from .pso import ParticleSwarm
+from .genetic import GeneticAlgorithm
 from .grid import GridSearch
+from .pso import ParticleSwarm
+from .random_forest import RandomForestSearcher
+from .random_search import RandomSearch
 
 PAPER_ALGORITHMS = ("rs", "rf", "ga", "bo_gp", "bo_tpe")
 EXTRA_ALGORITHMS = ("sa", "pso", "grid")

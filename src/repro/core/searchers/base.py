@@ -144,7 +144,7 @@ class Searcher(ABC):
         if configs != s.outstanding:
             raise ValueError("tell() configs must match the last ask() exactly")
         r = s.result
-        for c, v in zip(configs, values):
+        for c, v in zip(configs, values, strict=True):
             r.history_configs.append(c)
             r.history_values.append(float(v))
             if v < r.best_value:

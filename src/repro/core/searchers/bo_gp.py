@@ -101,7 +101,7 @@ class BOGPSearcher(Searcher):
             else:
                 gp.add(u, y[-1])
 
-        for r, v in zip(init_idx, init_vals):
+        for r, v in zip(init_idx, init_vals, strict=True):
             observe(r, v)
         seen_keys = self.space.flat_keys(init_idx).tolist()
 

@@ -62,13 +62,13 @@ class GeneticAlgorithm(Searcher):
         keys = [tuple(int(v) for v in row) for row in idxs]
         fresh_keys: list = []
         fresh_rows: list = []
-        for key, row in zip(keys, idxs):
+        for key, row in zip(keys, idxs, strict=True):
             if key not in seen and key not in fresh_keys:
                 fresh_keys.append(key)
                 fresh_rows.append(row)
         if fresh_rows:
             vals = yield self.space.decode_batch(np.array(fresh_rows))
-            seen.update(zip(fresh_keys, (float(v) for v in vals)))
+            seen.update(zip(fresh_keys, (float(v) for v in vals), strict=True))
         # a trimmed final batch leaves some keys unmeasured; the engine never
         # resumes the generator in that case, so every key is present here.
         return np.array([seen[k] for k in keys], dtype=np.float64)

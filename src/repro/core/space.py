@@ -98,7 +98,7 @@ class SearchSpace:
     # -- encode / decode ----------------------------------------------------
     def decode(self, idx: np.ndarray) -> Config:
         """Index vector -> config dict."""
-        return {p.name: p.values[int(i)] for p, i in zip(self.params, idx)}
+        return {p.name: p.values[int(i)] for p, i in zip(self.params, idx, strict=True)}
 
     def encode(self, config: Config) -> np.ndarray:
         return np.array(
@@ -115,7 +115,7 @@ class SearchSpace:
         lut = [{v: i for i, v in enumerate(p.values)} for p in self.params]
         try:
             return np.array(
-                [[m[c[p.name]] for p, m in zip(self.params, lut)] for c in configs],
+                [[m[c[p.name]] for p, m in zip(self.params, lut, strict=True)] for c in configs],
                 dtype=np.int64,
             ).reshape(len(configs), self.n_params)
         except KeyError as e:
@@ -208,7 +208,8 @@ class SearchSpace:
 
     def __repr__(self) -> str:  # pragma: no cover
         ps = ", ".join(f"{p.name}[{p.cardinality}]" for p in self.params)
-        return f"SearchSpace({ps}, |S|={self.cardinality}, constrained={self.constraint is not None})"
+        constrained = self.constraint is not None
+        return f"SearchSpace({ps}, |S|={self.cardinality}, constrained={constrained})"
 
 
 def _paper_wg256(cfg: Config) -> bool:

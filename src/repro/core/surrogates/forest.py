@@ -137,7 +137,8 @@ class RegressionTree:
 
     # -- prediction ---------------------------------------------------------
     def predict(self, X: np.ndarray) -> np.ndarray:
-        assert self.tree_ is not None, "call fit first"
+        if self.tree_ is None:
+            raise RuntimeError("call fit first")
         X = np.asarray(X, dtype=np.float64)
         t = self.tree_
         node = np.zeros(len(X), dtype=np.int32)

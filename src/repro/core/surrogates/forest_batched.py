@@ -241,7 +241,8 @@ class BatchedForest:
         is 4 flat gathers + a compare over (chunk*T*P,) arrays — no boolean
         mask bookkeeping.  Early-exits when the whole chunk is at leaves.
         """
-        assert self.feature is not None, "call fit first"
+        if self.feature is None:
+            raise RuntimeError("call fit first")
         self._freeze_leaves()
         Xp = np.asarray(Xp)
         shared = Xp.ndim == 2

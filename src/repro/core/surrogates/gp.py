@@ -143,7 +143,8 @@ class GaussianProcess:
 
     def predict(self, Xs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         """Posterior mean and stddev (in the original y units)."""
-        assert self._L is not None, "no observations"
+        if self._L is None:
+            raise RuntimeError("call fit first: GP has no observations")
         from scipy.linalg import solve_triangular
 
         Xs = np.asarray(Xs, dtype=np.float64)

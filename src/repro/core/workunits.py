@@ -30,11 +30,11 @@ Executors (:mod:`repro.core.executors`) consume units and return
 from __future__ import annotations
 
 import json
-import time
 from dataclasses import dataclass, field
 
 import numpy as np
 
+from .clock import monotonic
 from .runner import CellResult
 
 __all__ = [
@@ -343,7 +343,7 @@ class UnitJournal:
 
     def put(self, result: UnitResult) -> None:
         self.store.put_meta(self.key(result.unit), json.dumps(result.to_dict()))
-        now = time.monotonic()
+        now = monotonic()
         if now - self._last_flush >= self.min_flush_s:
             self.store.save()
             self._last_flush = now

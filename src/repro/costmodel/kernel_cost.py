@@ -272,7 +272,7 @@ def true_optimum(w: KernelWorkload, chip: ChipModel) -> tuple[Config, float]:
     flat = np.stack([a.ravel() for a in (TX, TY, TZ, WX, WY, WZ)], axis=1)
     times = runtime_model_batch(w, chip, flat)
     j = int(np.argmin(times))
-    cfg = dict(zip(("t_x", "t_y", "t_z", "w_x", "w_y", "w_z"), map(int, flat[j])))
+    cfg = dict(zip(("t_x", "t_y", "t_z", "w_x", "w_y", "w_z"), map(int, flat[j]), strict=True))
     return cfg, float(times[j])
 
 

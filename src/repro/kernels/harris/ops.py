@@ -9,10 +9,9 @@ from __future__ import annotations
 
 from functools import partial
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..common import Config, KernelBenchSpec, geometry_from_config
 from .kernel import harris_pallas

@@ -35,12 +35,17 @@ import numpy as np
 
 from repro.configs import REGISTRY, SHAPES, applicable_shapes
 from repro.configs.base import ArchConfig, ShapeCfg
+from repro.launch.hlo_analysis import collective_stats, dot_flops
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import decode_specs, prefill_batch_specs, train_batch_specs
 from repro.models import abstract_params, build_model, param_axes, param_count
-from repro.launch.hlo_analysis import collective_stats, dot_flops
 from repro.sharding.rules import ShardingRules
-from repro.train.step import TrainSettings, make_decode_step, make_prefill_step, make_train_step
+from repro.train.step import (
+    TrainSettings,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
 
 RESULTS_DIR = os.path.join("results", "dryrun")
 

@@ -10,9 +10,8 @@ cross-pod DCI links.
 
 from __future__ import annotations
 
-import numpy as np
-
 import jax
+import numpy as np
 from jax.sharding import Mesh
 
 

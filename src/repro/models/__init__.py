@@ -1,8 +1,8 @@
-from .param import P, abstract_params, init_params, param_axes, param_count
-from .registry import build_model
 from .decoder import DecoderLM
 from .encdec import EncDecLM
 from .hybrid import HybridLM
+from .param import P, abstract_params, init_params, param_axes, param_count
+from .registry import build_model
 from .ssm import SSMLM
 
 __all__ = [

@@ -12,11 +12,15 @@ spec).
 
 from __future__ import annotations
 
-
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
+from ..sharding.constrain import (
+    constrain_residual,
+    gather_layer_weights,
+    strip_layer_axis,
+)
 from .layers import (
     COMPUTE_DTYPE,
     apply_rope,
@@ -28,11 +32,6 @@ from .layers import (
 )
 from .mla import MLADims, mla_decode, mla_prefill
 from .moe import MoEDims, moe_forward
-from ..sharding.constrain import (
-    constrain_residual,
-    gather_layer_weights,
-    strip_layer_axis,
-)
 from .param import P, param_axes
 
 REMAT_POLICIES = {

@@ -18,9 +18,9 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
+from ..sharding.constrain import constrain_residual
 from .decoder import _maybe_remat
 from .layers import COMPUTE_DTYPE, attention, layer_norm, lm_logits
-from ..sharding.constrain import constrain_residual
 from .param import P
 
 

@@ -19,21 +19,30 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from .decoder import _maybe_remat
-from .layers import COMPUTE_DTYPE, apply_rope, attention, embed, lm_logits, rms_norm, swiglu
-from .mamba2 import mamba2_decode, mamba2_forward
 from ..sharding.constrain import (
     constrain_residual,
     gather_layer_weights,
     strip_layer_axis,
 )
+from .decoder import _maybe_remat
+from .layers import (
+    COMPUTE_DTYPE,
+    apply_rope,
+    attention,
+    embed,
+    lm_logits,
+    rms_norm,
+    swiglu,
+)
+from .mamba2 import mamba2_decode, mamba2_forward
 from .param import P, param_axes
 from .ssm import mamba_layer_spec, ssm_dims
 
 
 class HybridLM:
     def __init__(self, cfg: ArchConfig, moe_groups: int = 1):
-        assert cfg.shared_attn_every > 0
+        if cfg.shared_attn_every <= 0:
+            raise ValueError("shared_attn_every must be > 0")
         self.cfg = cfg
         self.dims = ssm_dims(cfg)
         self.n_groups = cfg.n_layers // cfg.shared_attn_every

@@ -96,7 +96,8 @@ def _chunked_attn(
     pure JAX): peak score memory is (B, H, q_chunk, Sk) instead of
     (B, H, Sq, Sk).  Used for long prefill (Sq >= LONG_SEQ_THRESHOLD)."""
     b, sq, h, d = q.shape
-    assert sq % q_chunk == 0, (sq, q_chunk)
+    if sq % q_chunk != 0:
+        raise ValueError(f"seq len {sq} not divisible by q_chunk {q_chunk}")
     n_chunks = sq // q_chunk
     qc = q.reshape(b, n_chunks, q_chunk, h, d).transpose(1, 0, 2, 3, 4)
 

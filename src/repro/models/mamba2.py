@@ -69,7 +69,8 @@ def ssd_chunked(
 ) -> jnp.ndarray:
     bsz, s, h, p = x.shape
     g, n = b.shape[2], b.shape[3]
-    assert s % chunk == 0, (s, chunk)
+    if s % chunk != 0:
+        raise ValueError(f"seq len {s} not divisible by chunk {chunk}")
     nc = s // chunk
     rep = h // g
 

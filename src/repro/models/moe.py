@@ -181,7 +181,8 @@ def moe_forward(
     b, s, d = x.shape
     g = dims.groups
     tokens = b * s
-    assert tokens % g == 0, (tokens, g)
+    if tokens % g != 0:
+        raise ValueError(f"token count {tokens} not divisible by group {g}")
     xg = x.reshape(g, tokens // g, d)
     xg = _constrain(xg, "batch", None, None, group_level=True)
 

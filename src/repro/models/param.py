@@ -63,7 +63,7 @@ def _initializer(p: P, key: jax.Array) -> jax.Array:
 def init_params(spec, rng: jax.Array):
     leaves, treedef = jax.tree_util.tree_flatten(spec, is_leaf=is_leaf)
     keys = jax.random.split(rng, len(leaves))
-    vals = [_initializer(p, k) for p, k in zip(leaves, keys)]
+    vals = [_initializer(p, k) for p, k in zip(leaves, keys, strict=True)]
     return jax.tree_util.tree_unflatten(treedef, vals)
 
 

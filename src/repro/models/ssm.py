@@ -11,14 +11,14 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from .decoder import _maybe_remat
-from .layers import COMPUTE_DTYPE, embed, lm_logits, rms_norm
-from .mamba2 import SSMDims, mamba2_decode, mamba2_forward
 from ..sharding.constrain import (
     constrain_residual,
     gather_layer_weights,
     strip_layer_axis,
 )
+from .decoder import _maybe_remat
+from .layers import COMPUTE_DTYPE, embed, lm_logits, rms_norm
+from .mamba2 import SSMDims, mamba2_decode, mamba2_forward
 from .param import P, param_axes
 
 

@@ -41,14 +41,14 @@ with no change here — only the provenance dict's ``interpret``/
 from __future__ import annotations
 
 import threading
-import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable, Sequence
 
 import numpy as np
 
-from ..core.measurement import BaseMeasurement, StageClock, fence
+from ..core.clock import monotonic
 from ..core.engine import config_key
+from ..core.measurement import BaseMeasurement, StageClock, fence
 from ..kernels.common import Config, geometry_from_config
 from .validity import (
     DEFAULT_MAX_GRID,
@@ -67,7 +67,8 @@ class PallasMeasurement(BaseMeasurement):
     pre-screen (compile/run failures are still caught) — useful to audit the
     screen itself.  ``pipeline_workers=N`` enables the batch compile
     prefetcher (N pool threads); 0 keeps the inline compile-then-time loop.
-    ``timer`` is the timing-stage clock (default ``time.perf_counter``) —
+    ``timer`` is the timing-stage clock (default: the injectable monotonic
+    seam in :mod:`repro.core.clock`, i.e. ``perf_counter``) —
     injectable so tests can prove pipeline on/off equivalence on
     deterministic timestamps.  ``seed`` is accepted for backend-factory
     uniformity; wall-clock timing has no noise stream to seed.
@@ -97,7 +98,9 @@ class PallasMeasurement(BaseMeasurement):
         self.max_grid = int(max_grid)
         self.validate = validate
         self.pipeline_workers = int(pipeline_workers)
-        self._timer = timer if timer is not None else time.perf_counter
+        # default to the injectable clock seam (repro.core.clock) rather than
+        # a direct perf_counter reference: one allowlist entry, one override
+        self._timer = timer if timer is not None else monotonic
         #: per-stage wall-clock (screen / compile / time), per run — reset()
         #: zeroes it together with the per-run counters below
         self.clock = StageClock()

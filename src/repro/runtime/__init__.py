@@ -1,3 +1,4 @@
+from .elastic import degraded_mesh, reshard
 from .fault_tolerance import (
     InjectedFailure,
     RunnerConfig,
@@ -5,7 +6,6 @@ from .fault_tolerance import (
     StragglerEvent,
     TrainingRunner,
 )
-from .elastic import degraded_mesh, reshard
 
 __all__ = [
     "InjectedFailure",

@@ -94,7 +94,7 @@ class ShardingRules:
         """
         used: set[str] = set()
         parts = []
-        for dim, logical in zip(shape, axes):
+        for dim, logical in zip(shape, axes, strict=False):
             mesh_axes = self.mesh_axes_for(logical, mesh)
             mesh_axes = tuple(a for a in mesh_axes if a not in used)
             if mesh_axes:

@@ -1,0 +1,28 @@
+"""DET fixture: every determinism rule violated once, no suppressions."""
+
+import random
+import time
+from datetime import datetime
+
+import numpy as np
+
+
+def wall_clock():
+    t0 = time.time()
+    t1 = time.perf_counter()
+    stamp = datetime.now()
+    return t0, t1, stamp
+
+
+def unseeded():
+    a = np.random.rand(3)
+    b = random.random()
+    return a, b
+
+
+def set_order(keys: set):
+    out = []
+    for k in keys:
+        out.append(k)
+    listed = list({1, 2, 3})
+    return out, listed

@@ -1,0 +1,20 @@
+"""DET fixture: the compliant spellings of everything det_bad.py does."""
+
+import numpy as np
+
+from repro.core.clock import monotonic
+
+
+def wall_clock():
+    return monotonic()
+
+
+def seeded():
+    rng = np.random.default_rng(0)
+    return rng.random(3)
+
+
+def set_order(keys: set):
+    out = list(sorted(keys))
+    n = len(keys)          # order-insensitive reductions are fine
+    return out, n, min(keys), max(keys)

@@ -1,0 +1,28 @@
+"""DET fixture: the same violations, each explicitly allowed."""
+
+import random
+import time
+from datetime import datetime
+
+import numpy as np
+
+
+def wall_clock():
+    t0 = time.time()  # repro: allow[DET001]
+    t1 = time.perf_counter()  # repro: allow[DET001]
+    stamp = datetime.now()  # repro: allow[DET]
+    return t0, t1, stamp
+
+
+def unseeded():
+    a = np.random.rand(3)  # repro: allow[DET002]
+    b = random.random()  # repro: allow[DET002]
+    return a, b
+
+
+def set_order(keys: set):
+    out = []
+    for k in keys:  # repro: allow[DET003]
+        out.append(k)
+    listed = list({1, 2, 3})  # repro: allow[DET003]
+    return out, listed

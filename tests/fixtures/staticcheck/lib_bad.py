@@ -1,0 +1,10 @@
+"""LIB fixture: bare assert guarding runtime state."""
+
+
+class Model:
+    def __init__(self):
+        self.fitted = None
+
+    def predict(self, x):
+        assert self.fitted is not None, "call fit first"
+        return self.fitted * x

@@ -1,0 +1,10 @@
+"""LIB fixture: the same assert, explicitly allowed."""
+
+
+class Model:
+    def __init__(self):
+        self.fitted = None
+
+    def predict(self, x):
+        assert self.fitted is not None  # repro: allow[LIB001]
+        return self.fitted * x

@@ -1,0 +1,7 @@
+"""PROV fixture: the speed knob injected into backend_kwargs."""
+
+
+def enable_pipeline(spec, n: int):
+    return spec.replace(
+        backend_kwargs={**spec.backend_kwargs, "pipeline_workers": int(n)}
+    )

@@ -1,0 +1,12 @@
+"""PROV fixture: a cache-key sink that forgets to exclude the knob."""
+
+
+class Spec:
+    backend_kwargs: dict = {}
+    kernel = "k"
+    backend = "b"
+
+    def default_cache_key(self) -> str:
+        kwargs = dict(self.backend_kwargs)
+        kw = ",".join(f"{k}={v}" for k, v in sorted(kwargs.items()))
+        return f"{self.kernel}/{self.backend}/{kw}"

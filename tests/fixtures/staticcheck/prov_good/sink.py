@@ -1,0 +1,16 @@
+"""PROV fixture: the sink correctly filters the knob back out."""
+
+
+class Spec:
+    backend_kwargs: dict = {}
+    kernel = "k"
+    backend = "b"
+
+    def default_cache_key(self) -> str:
+        kwargs = {
+            k: v
+            for k, v in self.backend_kwargs.items()
+            if k != "pipeline_workers"
+        }
+        kw = ",".join(f"{k}={v}" for k, v in sorted(kwargs.items()))
+        return f"{self.kernel}/{self.backend}/{kw}"

@@ -1,0 +1,9 @@
+"""SER fixture: a lambda embedded in a *_kwargs dict literal."""
+
+
+def build(tune):
+    return tune(
+        kernel="k",
+        searcher_kwargs={"score_fn": lambda cfg: 0.0},
+        backend_kwargs={"chip": "v5e"},
+    )

@@ -1,0 +1,9 @@
+"""SER fixture: the same lambda, explicitly allowed (in-process only)."""
+
+
+def build(tune):
+    return tune(
+        kernel="k",
+        searcher_kwargs={"score_fn": lambda cfg: 0.0},  # repro: allow[SER003]
+        backend_kwargs={"chip": "v5e"},
+    )

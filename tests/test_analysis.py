@@ -79,7 +79,7 @@ def test_bootstrap_cis_deterministic_under_fixed_seed(results):
         (x[1], x[2], y[1], y[2])
         for k in a
         for alg in a[k]
-        for x, y in zip(a[k][alg].values(), c[k][alg].values())
+        for x, y in zip(a[k][alg].values(), c[k][alg].values(), strict=True)
     ]
     assert any(x[:2] != x[2:] for x in flat)        # seed actually matters
 
@@ -218,7 +218,7 @@ def test_claims_insufficient_on_missing_algorithms(results_dir):
     res = analysis.load_all(results_dir)
     (full, meta) = res[("harris", "v5e")]
     partial = MatrixResults()
-    for (algo, s), cell in full.cells.items():
+    for (algo, _s), cell in full.cells.items():
         if algo != "bo_tpe":
             partial.add(cell)
     checks = analysis.check_claims({("harris", "v5e"): (partial, meta)})

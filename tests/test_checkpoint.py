@@ -40,7 +40,7 @@ def test_save_restore_roundtrip(tmp_path):
     restored, step = restore(d, zeros)
     assert step == 7
     for a, b in zip(jax.tree_util.tree_leaves(state),
-                    jax.tree_util.tree_leaves(restored)):
+                    jax.tree_util.tree_leaves(restored), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -98,7 +98,7 @@ def test_runner_restart_reproduces_uninterrupted_run(tmp_path):
     resumed_state, _ = r2.run(state0, n_steps=6)
 
     for a, b in zip(jax.tree_util.tree_leaves(ref_state["params"]),
-                    jax.tree_util.tree_leaves(resumed_state["params"])):
+                    jax.tree_util.tree_leaves(resumed_state["params"]), strict=True):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32), atol=1e-7)
 
@@ -137,5 +137,5 @@ def test_elastic_reshard_smoke():
     axes = param_axes(model.spec())
     moved = reshard(state["params"], axes, ShardingRules(), mesh)
     for a, b in zip(jax.tree_util.tree_leaves(state["params"]),
-                    jax.tree_util.tree_leaves(moved)):
+                    jax.tree_util.tree_leaves(moved), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

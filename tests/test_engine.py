@@ -5,12 +5,12 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    EXTRA_ALGORITHMS,
+    PAPER_ALGORITHMS,
     CallableMeasurement,
     DiskCachedMeasurement,
-    EXTRA_ALGORITHMS,
     ExperimentDesign,
     MeasurementStore,
-    PAPER_ALGORITHMS,
     TuningSession,
     TuningSpec,
     config_key,

@@ -1,18 +1,11 @@
 """Pallas kernels vs pure-jnp oracles across shape/dtype/config sweeps
 (interpret mode on CPU; same pallas_call lowers to Mosaic on TPU)."""
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
-import jax.numpy as jnp
 
-from repro.kernels import (
-    add,
-    add_ref,
-    harris,
-    harris_ref,
-    mandelbrot,
-    mandelbrot_ref,
-)
+from repro.kernels import add, add_ref, harris, harris_ref, mandelbrot, mandelbrot_ref
 
 CONFIGS = [
     {},                                                   # defaults

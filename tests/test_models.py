@@ -15,10 +15,10 @@ import numpy as np
 import pytest
 
 from repro.configs import REGISTRY
+from repro.core.space import Config  # noqa: F401  (import sanity)
 from repro.models import build_model, init_params
 from repro.models.mamba2 import SSMDims, mamba2_decode, mamba2_forward, ssd_chunked
 from repro.models.moe import MoEDims, moe_forward
-from repro.core.space import Config  # noqa: F401  (import sanity)
 
 RNG = jax.random.PRNGKey(42)
 
@@ -103,7 +103,7 @@ def naive_moe(x, params, dims):
     for i in range(t):
         gates = probs[i, order[i]]
         gates = gates / gates.sum()
-        for gate, e in zip(gates, order[i]):
+        for gate, e in zip(gates, order[i], strict=True):
             h = np.asarray(x[i], np.float64)
             g = h @ np.asarray(params["gate"][e], np.float64)
             u = h @ np.asarray(params["up"][e], np.float64)

@@ -33,9 +33,9 @@ from repro.core import (
 from repro.core.experiment import ExperimentDesign
 from repro.kernels.common import KernelBenchSpec, geometry_from_config
 from repro.pallas_bench import (
-    PallasWorkload,
     InvalidMeasurement,
     PallasMeasurement,
+    PallasWorkload,
     default_space,
     make_workload,
     validate_config,
@@ -80,7 +80,7 @@ def test_workload_inputs_deterministic_across_instances():
     a1 = make_workload("add", x=64, y=128).materialize()
     a2 = make_workload("add", x=64, y=128).materialize()
     assert len(a1) == 2
-    for u, v in zip(a1, a2):
+    for u, v in zip(a1, a2, strict=True):
         np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
     # a different input_seed gives a different problem
     b = make_workload("add", x=64, y=128, input_seed=1).materialize()

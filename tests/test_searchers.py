@@ -5,9 +5,9 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    CallableMeasurement,
-    PAPER_ALGORITHMS,
     EXTRA_ALGORITHMS,
+    PAPER_ALGORITHMS,
+    CallableMeasurement,
     make_searcher,
     paper_space,
 )

@@ -1,0 +1,336 @@
+"""Tests for ``repro.staticcheck`` — the static gate on the paper-scale run.
+
+The fixture corpus under ``tests/fixtures/staticcheck/`` pins golden output:
+every rule family has a *_bad fixture proving the violation is caught, a
+*_suppressed fixture proving ``# repro: allow[RULE]`` is honored, and (for
+DET/PROV) a *_good fixture proving the compliant spelling passes.  The PROV
+regression test re-introduces the ``pipeline_workers``-in-cache-key bug on
+a copy of ``api.py`` and requires the checker to fail.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.api import TuningSpec
+from repro.core.experiment import ExperimentDesign
+from repro.core.space import Param, SearchSpace
+from repro.staticcheck import Finding, check_paths, format_finding
+from repro.staticcheck.catalog import RULES, resolve_select
+from repro.staticcheck.findings import apply_suppressions, suppressions_for
+from repro.staticcheck.spec_rules import (
+    check_cache_key_namespaces,
+    preflight_design,
+    preflight_spec,
+)
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures", "staticcheck")
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def fixture(*parts: str) -> str:
+    return os.path.join(FIXTURES, *parts)
+
+
+def rules_in(findings: list[Finding]) -> set[str]:
+    return {f.rule for f in findings}
+
+
+# ------------------------------------------------------------------ corpus
+
+
+def test_golden_output_over_corpus():
+    """The full fixture corpus produces exactly the pinned findings."""
+    findings = check_paths([FIXTURES], registry=False)
+    got = [
+        format_finding(f).replace(FIXTURES + os.sep, "") for f in findings
+    ]
+    with open(fixture("expected_bad.txt"), encoding="utf-8") as fh:
+        expected = fh.read().splitlines()
+    assert got == expected
+
+
+@pytest.mark.parametrize(
+    "family,bad,suppressed,expected_rules",
+    [
+        ("DET", "det_bad.py", "det_suppressed.py",
+         {"DET001", "DET002", "DET003"}),
+        ("LIB", "lib_bad.py", "lib_suppressed.py", {"LIB001"}),
+        ("SER", "ser_bad.py", "ser_suppressed.py", {"SER003"}),
+    ],
+)
+def test_violation_caught_and_suppression_honored(
+    family, bad, suppressed, expected_rules
+):
+    bad_findings = check_paths([fixture(bad)], registry=False)
+    assert rules_in(bad_findings) == expected_rules
+    assert all(f.path.endswith(bad) for f in bad_findings)
+    assert check_paths([fixture(suppressed)], registry=False) == []
+
+
+def test_prov_violation_caught_and_clean_sink_passes():
+    bad = check_paths([fixture("prov_bad")], registry=False)
+    assert rules_in(bad) == {"PROV001"}
+    assert "pipeline_workers" in bad[0].message
+    assert "injector.py" in bad[0].message  # names the injection site
+    assert check_paths([fixture("prov_good")], registry=False) == []
+
+
+def test_prov_suppression_honored(tmp_path):
+    shutil.copy(fixture("prov_bad", "injector.py"), tmp_path / "injector.py")
+    sink = open(fixture("prov_bad", "sink.py"), encoding="utf-8").read()
+    sink = sink.replace(
+        "def default_cache_key(self) -> str:",
+        "def default_cache_key(self) -> str:  # repro: allow[PROV001]",
+    )
+    (tmp_path / "sink.py").write_text(sink)
+    assert check_paths([str(tmp_path)], registry=False) == []
+
+
+def test_det_good_fixture_is_clean():
+    assert check_paths([fixture("det_good.py")], registry=False) == []
+
+
+# ------------------------------------------------ the repo itself is clean
+
+
+def test_repo_src_is_clean():
+    """`python -m repro.staticcheck src` exits 0 (the acceptance gate)."""
+    findings = check_paths([SRC], registry=True)
+    errors = [f for f in findings if f.severity == "error"]
+    assert errors == [], [format_finding(f) for f in errors]
+
+
+def test_reintroducing_cache_key_bug_fails_prov(tmp_path):
+    """Deleting the pipeline_workers filter in default_cache_key must make
+    PROV001 fire — the regression the rule exists to stop."""
+    api = open(
+        os.path.join(SRC, "repro", "core", "api.py"), encoding="utf-8"
+    ).read()
+    broken = api.replace(
+        'if k != "pipeline_workers"', 'if k != "never_this_knob"'
+    )
+    assert broken != api, "filter moved? update this test"
+    (tmp_path / "api.py").write_text(broken)
+    findings = check_paths([str(tmp_path / "api.py")], registry=False)
+    assert "PROV001" in rules_in(findings)
+
+
+# ------------------------------------------------------------ suppressions
+
+
+def test_suppression_parsing_rules_and_families():
+    src = "x = 1  # repro: allow[DET001, SER]\ny = 2\n"
+    allowed = suppressions_for(src)
+    assert allowed == {1: frozenset({"DET001", "SER"})}
+    f_exact = Finding("p.py", 1, "DET001", "m")
+    f_family = Finding("p.py", 1, "SER003", "m")
+    f_other = Finding("p.py", 1, "LIB001", "m")
+    kept, n = apply_suppressions(
+        [f_exact, f_family, f_other], {"p.py": src}
+    )
+    assert kept == [f_other]
+    assert n == 2
+
+
+def test_select_expands_families():
+    assert resolve_select("DET") == frozenset({"DET001", "DET002", "DET003"})
+    assert resolve_select("DET001,PROV") == frozenset({"DET001", "PROV001"})
+    with pytest.raises(KeyError):
+        resolve_select("NOPE")
+
+
+def test_github_format_annotations():
+    f = Finding("src/x.py", 12, "DET001", "msg here", col=4)
+    out = format_finding(f, "github")
+    assert out == "::error file=src/x.py,line=12,col=4,title=DET001::msg here"
+    info = Finding("<spec>", 0, "SPEC001", "space: 8", severity="info")
+    assert format_finding(info, "github").startswith("::notice file=<spec>")
+
+
+# ------------------------------------------------------- registry checks
+
+
+def test_registry_checks_clean_on_real_registries():
+    from repro.staticcheck.reg import check_registries
+
+    errors = [f for f in check_registries() if f.severity == "error"]
+    assert errors == [], [format_finding(f) for f in errors]
+
+
+def test_reg001_catches_propose_less_searcher():
+    from repro.core.searchers import SEARCHERS
+    from repro.core.searchers.base import Searcher
+    from repro.staticcheck.reg import check_searchers
+
+    class Hollow(Searcher):
+        name = "_hollow"
+
+    SEARCHERS["_hollow"] = Hollow
+    try:
+        findings = check_searchers()
+        assert any(
+            f.rule == "REG001" and "_propose" in f.message for f in findings
+        )
+    finally:
+        del SEARCHERS["_hollow"]
+
+
+def test_reg002_catches_broken_store():
+    from repro.core.stores import STORES
+    from repro.staticcheck.reg import check_executors_and_stores
+
+    class NotAStore:
+        pass
+
+    STORES["_broken"] = NotAStore
+    try:
+        findings = check_executors_and_stores()
+        assert any(
+            f.rule == "REG002" and "_broken" in f.message for f in findings
+        )
+    finally:
+        del STORES["_broken"]
+
+
+def test_reg003_catches_incomplete_kernel_bench():
+    from repro.kernels import KERNEL_BENCHES
+    from repro.kernels.common import KernelBenchSpec
+    from repro.staticcheck.reg import check_kernels
+
+    KERNEL_BENCHES["_stub"] = KernelBenchSpec(name="_stub", n_inputs=1)
+    try:
+        findings = check_kernels()
+        assert any(
+            f.rule == "REG003" and "make_inputs" in f.message
+            for f in findings
+        )
+    finally:
+        del KERNEL_BENCHES["_stub"]
+
+
+def test_ser002_catches_callable_default():
+    from repro.core.backends import BACKENDS, Backend
+    from repro.staticcheck.reg import check_backends
+
+    def make(kernel="k", seed=0, hook=print):
+        raise NotImplementedError
+
+    BACKENDS["_lambda"] = Backend(name="_lambda", make=make)
+    try:
+        findings = check_backends()
+        assert any(
+            f.rule == "SER002" and "_lambda" in f.message for f in findings
+        )
+    finally:
+        del BACKENDS["_lambda"]
+
+
+# -------------------------------------------------------------- pre-flight
+
+
+def tiny_spec(**kw) -> TuningSpec:
+    space = SearchSpace([Param("a", (1, 2, 4)), Param("b", (1, 2))])
+    kw.setdefault("kernel", "k")
+    kw.setdefault("backend", "callable")
+    kw.setdefault("space", space)
+    return TuningSpec(**kw)
+
+
+def test_preflight_reports_space_size():
+    findings = preflight_spec(tiny_spec())
+    info = [f for f in findings if f.rule == "SPEC001"]
+    assert len(info) == 1 and "6 configs" in info[0].message
+    assert all(f.severity != "error" for f in findings)
+
+
+def test_preflight_catches_unsatisfiable_constraint():
+    space = SearchSpace(
+        [Param("a", (1, 2, 4)), Param("b", (1, 2))],
+        constraint=lambda cfg: False,
+    )
+    findings = preflight_spec(tiny_spec(space=space))
+    assert "SPEC002" in rules_in(findings)
+
+
+def test_preflight_paper_design_seeds_collision_free():
+    findings = preflight_design(
+        ExperimentDesign.paper(),
+        algorithms=("rs", "rf", "ga", "bo_gp", "bo_tpe"),
+    )
+    assert "SPEC003" not in rules_in(findings)
+
+
+def test_preflight_warns_on_paper_scale_without_store():
+    design = ExperimentDesign.paper()
+    findings = preflight_design(design, algorithms=("rs", "rf", "ga"))
+    spec4 = [f for f in findings if f.rule == "SPEC004"]
+    assert len(spec4) == 1 and spec4[0].severity == "warning"
+
+
+def test_preflight_flags_thin_experiment_rows():
+    design = ExperimentDesign(sample_sizes=(25,), n_experiments=(5,))
+    findings = preflight_design(design)
+    assert "SPEC005" in rules_in(findings)
+
+
+def test_cache_key_namespace_collision_detected():
+    a = tiny_spec(store="json", store_path="cache.json", seed=0)
+    b = tiny_spec(store="json", store_path="cache.json", seed=1)
+    findings = check_cache_key_namespaces([a, b])
+    assert "SPEC003" in rules_in(findings)
+    # identical specs sharing a store are fine (that IS the resume path)
+    assert check_cache_key_namespaces([a, a]) == []
+
+
+# --------------------------------------------------------------------- CLI
+
+
+def run_cli(*args: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.staticcheck", *args],
+        capture_output=True,
+        text=True,
+        cwd=REPO,
+        env=env,
+    )
+
+
+def test_cli_exit_codes_and_formats():
+    bad = run_cli(fixture("det_bad.py"), "--no-registry")
+    assert bad.returncode == 1
+    assert "DET001" in bad.stdout
+
+    good = run_cli(fixture("det_good.py"), "--no-registry")
+    assert good.returncode == 0
+    assert "clean" in good.stdout
+
+    gh = run_cli(
+        fixture("det_bad.py"), "--no-registry", "--format", "github"
+    )
+    assert gh.returncode == 1
+    assert "::error file=" in gh.stdout
+
+    sel = run_cli(
+        fixture("det_bad.py"), "--no-registry", "--select", "LIB"
+    )
+    assert sel.returncode == 0  # DET findings filtered out
+
+    usage = run_cli()
+    assert usage.returncode == 2
+
+
+def test_cli_list_rules_covers_catalog():
+    out = run_cli("--list-rules")
+    assert out.returncode == 0
+    for rule_id in RULES:
+        if rule_id != "PARSE":
+            assert rule_id in out.stdout

@@ -96,7 +96,7 @@ def test_gp_incremental_add_matches_batch_fit():
     # mirror the hyperparameters so only the Cholesky path differs
     online.lengthscales = (batch.lengthscale,)
     online.noises = (batch.noise,)
-    for x, v in zip(X, y):
+    for x, v in zip(X, y, strict=True):
         online.add(x, v)
     Xs = rng.uniform(0, 1, size=(16, 3))
     mu_b, s_b = batch.predict(Xs)
@@ -120,4 +120,5 @@ def test_expected_improvement_properties():
     ei = expected_improvement(mu, sigma, best=1.0)
     assert ei[0] > ei[1] > ei[2] > 0
     # zero uncertainty, worse mean -> zero EI
-    assert expected_improvement(np.array([2.0]), np.array([1e-15]), 1.0)[0] == pytest.approx(0.0, abs=1e-12)
+    ei_worse = expected_improvement(np.array([2.0]), np.array([1e-15]), 1.0)[0]
+    assert ei_worse == pytest.approx(0.0, abs=1e-12)

@@ -39,7 +39,7 @@ def test_matrix_has_all_cells(smoke_matrix):
     results, _ = smoke_matrix
     assert set(results.algorithms()) == {"rs", "rf", "ga", "bo_gp", "bo_tpe"}
     assert results.sample_sizes() == [25, 50]
-    for (algo, s), cell in results.cells.items():
+    for (_algo, s), cell in results.cells.items():
         assert len(cell.final_values) == {25: 8, 50: 4}[s]
         assert (cell.n_samples_used <= s).all()
 

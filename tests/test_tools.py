@@ -1,0 +1,120 @@
+"""Tests for the ``tools/`` CLIs — currently ``compare_stores``.
+
+The executor layer's byte-identity contract is only as trustworthy as the
+tool that checks it, so the tool gets its own tests: identical stores exit
+0, a single-ulp value divergence exits nonzero *and names the offending
+key*, and the json/sqlite loaders agree.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import os
+import sys
+
+import pytest
+
+from repro.core.stores import MeasurementStore, SqliteMeasurementStore
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load_tool():
+    path = os.path.join(REPO, "tools", "compare_stores.py")
+    spec = importlib.util.spec_from_file_location("compare_stores", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def tool():
+    return load_tool()
+
+
+def write_store(path: str, entries: dict[str, float]):
+    store = (
+        SqliteMeasurementStore(path)
+        if path.endswith(".sqlite")
+        else MeasurementStore(path)
+    )
+    for k, v in entries.items():
+        store.put(k, v)
+    store.save()
+    return store
+
+
+ENTRIES = {"k/seed=1|a=1": 0.25, "k/seed=1|a=2": 0.5, "k/seed=2|a=1": 0.125}
+
+
+def test_identical_stores_exit_zero(tool, tmp_path, capsys):
+    a, b = str(tmp_path / "a.json"), str(tmp_path / "b.json")
+    write_store(a, ENTRIES)
+    write_store(b, ENTRIES)
+    assert tool.main([a, b]) == 0
+    out = capsys.readouterr().out
+    assert "IDENTICAL" in out
+    assert f"{len(ENTRIES)} measurement entries" in out
+
+
+def test_value_divergence_exits_nonzero_and_names_key(
+    tool, tmp_path, capsys
+):
+    a, b = str(tmp_path / "a.json"), str(tmp_path / "b.json")
+    write_store(a, ENTRIES)
+    diverged = dict(ENTRIES)
+    # one-byte divergence: the smallest representable nudge on one value
+    diverged["k/seed=1|a=2"] = float.fromhex("0x1.0000000000001p-1")
+    write_store(b, diverged)
+    assert tool.main([a, b]) == 1
+    out = capsys.readouterr().out
+    assert "DIFFER" in out
+    assert "value mismatch: k/seed=1|a=2" in out
+    # the untouched keys are NOT reported
+    assert "k/seed=1|a=1" not in out.replace("k/seed=1|a=2", "")
+
+
+def test_missing_key_reported_by_side(tool, tmp_path, capsys):
+    a, b = str(tmp_path / "a.json"), str(tmp_path / "b.json")
+    write_store(a, ENTRIES)
+    only_b = dict(ENTRIES)
+    extra = only_b.pop("k/seed=2|a=1")
+    write_store(b, {**only_b, "k/seed=9|fresh": extra})
+    assert tool.main([a, b]) == 1
+    out = capsys.readouterr().out
+    assert "only in A: k/seed=2|a=1" in out
+    assert "only in B: k/seed=9|fresh" in out
+
+
+def test_sqlite_and_json_stores_compare(tool, tmp_path, capsys):
+    a, b = str(tmp_path / "a.json"), str(tmp_path / "b.sqlite")
+    write_store(a, ENTRIES)
+    write_store(b, ENTRIES)
+    assert tool.main([a, b]) == 0
+    assert "IDENTICAL" in capsys.readouterr().out
+
+
+def test_meta_key_sets_compared(tool, tmp_path, capsys):
+    a, b = str(tmp_path / "a.json"), str(tmp_path / "b.json")
+    sa = write_store(a, ENTRIES)
+    sb = write_store(b, ENTRIES)
+    sa.put_meta("unit|x", "done")
+    sa.save()
+    assert tool.main([a, b]) == 0          # values still identical
+    capsys.readouterr()
+    assert tool.main([a, b, "--meta"]) == 1
+    assert "META KEYS DIFFER" in capsys.readouterr().out
+    sb.put_meta("unit|x", "done too")      # meta VALUES may differ freely
+    sb.save()
+    assert tool.main([a, b, "--meta"]) == 0
+
+
+def test_missing_file_raises(tool, tmp_path):
+    a = str(tmp_path / "a.json")
+    write_store(a, ENTRIES)
+    with pytest.raises(FileNotFoundError):
+        tool.main([a, str(tmp_path / "nope.json")])
+
+
+if __name__ == "__main__":
+    sys.exit(pytest.main([__file__, "-q"]))

@@ -30,12 +30,14 @@ def test_cross_entropy_uniform_is_log_vocab():
 
 def test_loss_decreases_over_steps():
     cfg, model, state = _tiny_state()
-    step = jax.jit(make_train_step(model, TrainSettings(remat="none",
-                                                        optimizer=AdamWConfig(lr=3e-3, warmup_steps=1))))
+    settings = TrainSettings(
+        remat="none", optimizer=AdamWConfig(lr=3e-3, warmup_steps=1)
+    )
+    step = jax.jit(make_train_step(model, settings))
     dc = DataConfig(seed=0)
     batch = make_train_batch(dc, cfg, seq_len=32, batch=4, step=0)
     losses = []
-    for i in range(12):
+    for _ in range(12):
         state, metrics = step(state, batch)   # overfit one batch
         losses.append(float(metrics["loss"]))
     assert losses[-1] < losses[0] * 0.8, losses
@@ -55,7 +57,7 @@ def test_grad_accum_matches_single_batch():
     assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-4)
     l1 = jax.tree_util.tree_leaves(st1["params"])
     l2 = jax.tree_util.tree_leaves(st2["params"])
-    for a, b in zip(l1, l2):
+    for a, b in zip(l1, l2, strict=True):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32), rtol=2e-4, atol=2e-5)
 
