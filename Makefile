@@ -18,9 +18,13 @@ smoke-pallas:
 # pass fans units across 2 worker processes, second pass (--force, same
 # store) must resume entirely from the unit journal and then render the
 # analysis REPORT.md (tables + figures + claim verdicts, uploaded as a CI
-# artifact)
+# artifact).  A third pass re-runs the same matrix with --telemetry
+# --progress into a fresh store: telemetry is a pure observability knob, so
+# the traced store's measurement values must be identical to the untraced
+# one, and the merged trace must drive summarize + Chrome export
+# (docs/telemetry.md)
 smoke-matrix:
-	rm -rf results/smoke_matrix
+	rm -rf results/smoke_matrix results/smoke_matrix_tel
 	PYTHONPATH=src $(PYTHON) -m benchmarks.paper_matrix --design scaled --budget 100 \
 	  --bench add --chip v5e --algos rs,ga --out results/smoke_matrix \
 	  --executor process --max-workers 2 --resume
@@ -28,6 +32,16 @@ smoke-matrix:
 	  --bench add --chip v5e --algos rs,ga --out results/smoke_matrix \
 	  --executor process --max-workers 2 --resume --force --report
 	test -f results/smoke_matrix/REPORT.md
+	PYTHONPATH=src $(PYTHON) -m benchmarks.paper_matrix --design scaled --budget 100 \
+	  --bench add --chip v5e --algos rs,ga --out results/smoke_matrix_tel \
+	  --executor process --max-workers 2 --resume --telemetry --progress
+	$(PYTHON) tools/compare_stores.py \
+	  results/smoke_matrix/add_v5e_cache.json \
+	  results/smoke_matrix_tel/add_v5e_cache.json
+	test -f results/smoke_matrix_tel/trace.jsonl
+	PYTHONPATH=src $(PYTHON) -m repro.telemetry summarize results/smoke_matrix_tel
+	PYTHONPATH=src $(PYTHON) -m repro.telemetry export results/smoke_matrix_tel
+	test -f results/smoke_matrix_tel/trace_chrome.json
 
 # tier-2: the device executor on a host faked to 4 chips
 # (XLA_FLAGS=--xla_force_host_platform_device_count=4) — the merged store's

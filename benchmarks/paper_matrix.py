@@ -20,6 +20,11 @@ is the legacy spelling of the process executor.
 verdicts — see ``repro.analysis``) into the results dir after the run, so the
 full-scale paper reproduction is "run the matrix, read REPORT.md".
 
+``--telemetry`` writes a JSONL span trace into the results dir (workers
+write ``trace.shard<k>.jsonl``, merged at join); ``--progress`` adds a
+periodic one-line units-done/ETA update on stderr — observability only,
+results and stores are bit-identical with either flag on or off.
+
 Usage:
     PYTHONPATH=src python -m benchmarks.paper_matrix --design paper --report
     PYTHONPATH=src python -m benchmarks.paper_matrix --design scaled --budget 2000 \\
@@ -100,15 +105,30 @@ def run_combo(bench: str, chip_name: str, design: ExperimentDesign, out_dir: str
               store: str = "json", backend: str = "costmodel",
               executor: str | None = None, max_workers: int | None = None,
               resume: bool = False,
-              pipeline_workers: int | None = None) -> None:
+              pipeline_workers: int | None = None,
+              telemetry_dir: str | None = None,
+              progress: bool = False) -> None:
     spec = combo_spec(bench, chip_name, design, out_dir, algorithms=algorithms,
                       seed=seed, cache=cache, dispatch=dispatch, store=store,
                       backend=backend)
     t0 = time.time()
-    repro.tune_matrix(spec, shards=shards, executor=executor,
-                      max_workers=max_workers, resume=resume,
-                      pipeline_workers=pipeline_workers,
-                      out_dir=out_dir, verbose=verbose)
+    reporter = None
+    if progress and telemetry_dir is not None:
+        from repro.telemetry import ProgressReporter
+
+        # periodic units-done/total + ETA on stderr, fed by the live trace —
+        # the fix for "--executor process prints nothing for minutes"
+        reporter = ProgressReporter(telemetry_dir)
+        reporter.start()
+    try:
+        repro.tune_matrix(spec, shards=shards, executor=executor,
+                          max_workers=max_workers, resume=resume,
+                          pipeline_workers=pipeline_workers,
+                          out_dir=out_dir, verbose=verbose,
+                          telemetry_dir=telemetry_dir)
+    finally:
+        if reporter is not None:
+            reporter.stop()
     record = repro.RunRecord.load(
         os.path.join(out_dir, f"{bench}_{chip_name}.json")
     )
@@ -160,6 +180,15 @@ def main() -> None:
                     help="analytical model, or real pallas_call execution "
                          "(interpret on CPU; use a scaled design — real "
                          "timings are wall-clock-bound)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="write a JSONL span trace (trace.jsonl, with "
+                         "per-worker shards merged at join) into the results "
+                         "dir; inspect with `python -m repro.telemetry "
+                         "<results_dir>`")
+    ap.add_argument("--progress", action="store_true",
+                    help="print a periodic one-line progress/ETA update to "
+                         "stderr while combos run (implies --telemetry; the "
+                         "trace is the data source)")
     ap.add_argument("--report", action="store_true",
                     help="after the run, render REPORT.md (tables + figures "
                          "+ claim verdicts) into the results dir via "
@@ -196,7 +225,11 @@ def main() -> None:
                       shards=args.shards, store=args.store,
                       backend=args.backend, executor=args.executor,
                       max_workers=args.max_workers, resume=args.resume,
-                      pipeline_workers=args.pipeline_workers)
+                      pipeline_workers=args.pipeline_workers,
+                      telemetry_dir=(
+                          out_dir if (args.telemetry or args.progress) else None
+                      ),
+                      progress=args.progress)
     print(f"[matrix] all combos done in {(time.time()-t0)/60:.1f} min -> {out_dir}")
     if args.report:
         from repro.analysis import generate_report

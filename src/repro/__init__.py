@@ -17,6 +17,8 @@ The public front door is the declarative tuning facade::
 See ``docs/public_api.md`` for the spec schema and the backend registry.
 """
 
+__version__ = "0.8.0"
+
 from .core.api import (
     RunRecord,
     TuningSession,
@@ -30,6 +32,7 @@ from .core.executors import EXECUTORS, Executor, register_executor
 from .core.stores import STORES, make_store
 
 __all__ = [
+    "__version__",
     "BACKENDS",
     "Backend",
     "EXECUTORS",

@@ -103,6 +103,48 @@ def _render_ranks(results: dict) -> str:
     return "\n".join(lines)
 
 
+def _telemetry_section(results: dict, results_dir: str) -> str:
+    """Counter totals from each combo's RunRecord plus per-stage duration
+    percentiles from the run's merged trace (when one exists).  Empty when
+    every combo ran with telemetry disabled and no trace file is present."""
+    lines: list[str] = []
+    combo_counters = {
+        key: meta["telemetry"].get("counters", {})
+        for key, (_, meta) in sorted(results.items())
+        if isinstance(meta.get("telemetry"), dict)
+        and meta["telemetry"].get("counters")
+    }
+    if combo_counters:
+        names = sorted({n for c in combo_counters.values() for n in c})
+        lines += ["### Counter totals", "",
+                  "| combo | " + " | ".join(names) + " |",
+                  "|---|" + "---|" * len(names)]
+        for (bench, chip), c in combo_counters.items():
+            cells = [str(c.get(n, 0)) for n in names]
+            lines.append(f"| {bench} x {chip} | " + " | ".join(cells) + " |")
+    from ..telemetry import TRACE_FILE, read_run, stage_percentiles
+
+    if os.path.exists(os.path.join(results_dir, TRACE_FILE)):
+        stages = stage_percentiles(read_run(results_dir))
+        if stages:
+            if lines:
+                lines.append("")
+            lines += [
+                "### Pipeline stage durations",
+                "",
+                "| stage | n | total (s) | p50 (ms) | p90 (ms) | p99 (ms) "
+                "| max (ms) |",
+                "|---|---|---|---|---|---|---|",
+            ]
+            for name, st in stages.items():
+                lines.append(
+                    f"| {name} | {st['count']} | {st['total_s']:.3f} | "
+                    f"{st['p50'] * 1e3:.3f} | {st['p90'] * 1e3:.3f} | "
+                    f"{st['p99'] * 1e3:.3f} | {st['max'] * 1e3:.3f} |"
+                )
+    return "\n".join(lines)
+
+
 def _spec_fingerprint(spec: dict) -> str:
     """Stable 8-hex id of a recorded spec (storage fields and the
     pipeline_workers speed knob excluded, matching the unit journal's
@@ -267,6 +309,9 @@ def generate_report(
                     "search cost (wall = compile + measure)",
                 )
             ]
+        tel = _telemetry_section(results, results_dir)
+        if tel:
+            parts += ["", "## Telemetry", "", tel]
     parts += ["", "## Paper-claim verdicts", "", _claims_section(results), ""]
 
     os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)

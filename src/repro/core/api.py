@@ -50,6 +50,7 @@ from typing import Callable
 
 import numpy as np
 
+from ..telemetry.null import NULL_TELEMETRY
 from .backends import BACKENDS, make_measurement
 from .clock import monotonic
 from .dataset import SampleDataset
@@ -312,6 +313,39 @@ class TuningSpec:
 # ----------------------------------------------------------------- RunRecord
 
 
+_GIT_STATE: dict | None = None
+
+
+def _git_state() -> dict:
+    """Best-effort code provenance: the checkout's commit SHA and a dirty
+    flag, memoized per process (two subprocess calls, once).  ``{}`` outside
+    a git checkout or without a ``git`` binary — records never *depend* on
+    it, it only answers "which code produced this result" when it can."""
+    global _GIT_STATE
+    if _GIT_STATE is None:
+        state: dict = {}
+        try:
+            import subprocess
+
+            root = os.path.dirname(os.path.abspath(__file__))
+            sha = subprocess.run(
+                ["git", "rev-parse", "HEAD"],
+                cwd=root, capture_output=True, text=True, timeout=5,
+            )
+            if sha.returncode == 0 and sha.stdout.strip():
+                state["git_sha"] = sha.stdout.strip()
+                st = subprocess.run(
+                    ["git", "status", "--porcelain"],
+                    cwd=root, capture_output=True, text=True, timeout=5,
+                )
+                if st.returncode == 0:
+                    state["git_dirty"] = bool(st.stdout.strip())
+        except Exception:
+            state = {}
+        _GIT_STATE = state
+    return _GIT_STATE
+
+
 def _provenance(wall_s: float | None = None) -> dict:
     p = {
         # a provenance timestamp SHOULD be the real wall clock; results never
@@ -324,6 +358,12 @@ def _provenance(wall_s: float | None = None) -> dict:
         "python": platform.python_version(),
         "numpy": np.__version__,
     }
+    try:
+        from .. import __version__ as _repro_version
+        p["repro_version"] = _repro_version
+    except ImportError:  # pragma: no cover - package always carries a version
+        pass
+    p.update(_git_state())
     if wall_s is not None:
         p["wall_s"] = round(float(wall_s), 3)
     return p
@@ -412,11 +452,17 @@ class TuningSession:
         store=None,
         store_path: str | None = None,
         verbose: bool = False,
+        telemetry=None,
     ):
         if not isinstance(spec, TuningSpec):
             raise TypeError(f"spec must be a TuningSpec, got {type(spec).__name__}")
         self.spec = spec
         self.verbose = verbose
+        # observability sink, NEVER part of the run's identity: it is a
+        # session/runtime knob (not a spec field) precisely so it can't leak
+        # into cache keys, journal namespaces, or spec fingerprints
+        self.telemetry = telemetry if telemetry is not None else NULL_TELEMETRY
+        self._last_telemetry: dict = {}
         self._backend = BACKENDS[spec.backend]
         self._has_overrides = any(
             x is not None for x in (space, measurement_factory, dataset, store)
@@ -463,6 +509,7 @@ class TuningSession:
             m = DiskCachedMeasurement(
                 m, self.store, prefix=f"{self.cache_key}/seed={exp_seed}"
             )
+        m.set_telemetry(self.telemetry)
         return m
 
     def _get_dataset(self) -> SampleDataset | None:
@@ -492,7 +539,8 @@ class TuningSession:
             spec.searcher, self.space, seed=spec.seed, **spec.searcher_kwargs
         )
         measurement = self.measurement = self._make_measurement(spec.seed)
-        result = drive(searcher, measurement, spec.budget, dispatch=spec.dispatch)
+        result = drive(searcher, measurement, spec.budget,
+                       dispatch=spec.dispatch, telemetry=self.telemetry)
         result.final_value = measurement.measure_final(
             result.best_config, spec.final_repeats
         )
@@ -566,6 +614,28 @@ class TuningSession:
         wall-clock, not results, so caches and journals stay valid across
         it).
         """
+        with self.telemetry.span("matrix", cache_key=self.cache_key):
+            return self._run_matrix_impl(
+                shards,
+                executor=executor,
+                max_workers=max_workers,
+                resume=resume,
+                unit_experiments=unit_experiments,
+                futures_pool=futures_pool,
+                pipeline_workers=pipeline_workers,
+            )
+
+    def _run_matrix_impl(
+        self,
+        shards: int,
+        *,
+        executor: str | None,
+        max_workers: int | None,
+        resume: bool,
+        unit_experiments: int | None,
+        futures_pool,
+        pipeline_workers: int | None,
+    ) -> MatrixResults:
         t0 = monotonic()
         if pipeline_workers is not None:
             if not self._backend.pipeline:
@@ -621,6 +691,27 @@ class TuningSession:
                     f"[session] resume: {len(done)}/{len(units)} units served "
                     "from the journal"
                 )
+        tel = self.telemetry
+        if tel.enabled:
+            # the plan event anchors live progress: consumers count unit /
+            # experiment "end" events AFTER the last plan in the stream
+            tel.event(
+                "plan",
+                executor=name,
+                workers=workers,
+                units=[u.key for u in pending],
+                units_total=len(units),
+                experiments_total=sum(u.n_unit_exp for u in units),
+                units_done_resume=len(done),
+                experiments_done_resume=sum(r.unit.n_unit_exp for r in done),
+            )
+            if done:
+                tel.inc("units_skipped_resume", len(done))
+        # snapshot BEFORE fresh units run: under the serial executor their
+        # counter deltas land in this same sink, so totals = pre-run snapshot
+        # + per-unit deltas is correct for every executor (workers ship their
+        # deltas back inside UnitResult.counters)
+        c_pre = tel.counters_snapshot()
         fresh: list[UnitResult] = []
         if pending:
             run_name = name
@@ -645,6 +736,28 @@ class TuningSession:
         for cell in cell_results:
             results.add(cell)
         self.save_store()
+        if tel.enabled:
+            n_exp = {(algo, s): e for algo, s, e in cells}
+            for (algo, s), w in sorted(self._last_cell_walls.items()):
+                tel.event(
+                    "cell",
+                    algo=algo,
+                    sample_size=s,
+                    n_experiments=n_exp.get((algo, s)),
+                    wall_s=round(w["wall_s"], 6),
+                    compile_s=round(w.get("compile_s", 0.0), 6),
+                    measure_s=round(w.get("measure_s", 0.0), 6),
+                )
+            totals: dict[str, float] = dict(c_pre)
+            for r in done + fresh:
+                for k, v in r.counters.items():
+                    totals[k] = totals.get(k, 0) + v
+            totals = {
+                k: int(v) if float(v).is_integer() else float(v)
+                for k, v in sorted(totals.items())
+            }
+            tel.event("totals", counters=totals)
+            self._last_telemetry = {"counters": totals}
         self.last_record = self.make_record(results, wall_s=monotonic() - t0)
         return results
 
@@ -709,48 +822,73 @@ class TuningSession:
         bit-identical to the monolithic per-cell loop.
         """
         spec = self.spec
+        tel = self.telemetry
         t0 = monotonic()
-        dataset = self._get_dataset()
-        n = unit.n_unit_exp
-        finals = np.empty(n)
-        search_best = np.empty(n)
-        n_used = np.empty(n, dtype=np.int64)
-        rf_batch = (
-            self._rf_unit_batched(unit)
-            if (dataset is not None and unit.algo == "rf")
-            else None
-        )
-        stage_acc: dict[str, float] = {}
-        for i, e in enumerate(range(unit.exp_lo, unit.exp_hi)):
-            exp_seed = stable_seed(spec.seed, unit.algo, unit.sample_size, e)
-            measurement = self.measurement = self._make_measurement(exp_seed)
-            if rf_batch is not None:
-                tr = rf_batch[i]
-            elif dataset is not None and unit.algo == "rs":
-                tr = self._rs_from_dataset(e, unit.sample_size)
-            else:
-                # searcher_kwargs belong to the spec's named searcher; other
-                # algorithms on the matrix axis use their own defaults (SA
-                # would reject GA's pop_size, etc.)
-                kwargs = (
-                    spec.searcher_kwargs if unit.algo == spec.searcher else {}
-                )
-                searcher = make_searcher(
-                    unit.algo, self.space, seed=exp_seed, **kwargs
-                )
-                tr = searcher.run(
-                    measurement, unit.sample_size, dispatch=spec.dispatch
-                )
-            finals[i] = measurement.measure_final(
-                tr.best_config, spec.design.final_repeats
+        c0 = tel.counters_snapshot()
+        with tel.span(
+            "unit", unit=unit.key, algo=unit.algo, sample_size=unit.sample_size
+        ):
+            dataset = self._get_dataset()
+            n = unit.n_unit_exp
+            finals = np.empty(n)
+            search_best = np.empty(n)
+            n_used = np.empty(n, dtype=np.int64)
+            rf_batch = (
+                self._rf_unit_batched(unit)
+                if (dataset is not None and unit.algo == "rf")
+                else None
             )
-            search_best[i] = tr.best_value
-            n_used[i] = tr.n_samples
-            # staged backends (pallas) report per-stage clocks; unstaged ones
-            # report {} and the unit carries no breakdown
-            for k, v in measurement.stage_times().items():
-                stage_acc[k] = stage_acc.get(k, 0.0) + float(v)
+            stage_acc: dict[str, float] = {}
+            for i, e in enumerate(range(unit.exp_lo, unit.exp_hi)):
+                with tel.span("experiment", experiment=e, unit=unit.key):
+                    exp_seed = stable_seed(
+                        spec.seed, unit.algo, unit.sample_size, e
+                    )
+                    measurement = self.measurement = self._make_measurement(
+                        exp_seed
+                    )
+                    if rf_batch is not None:
+                        tr = rf_batch[i]
+                    elif dataset is not None and unit.algo == "rs":
+                        tr = self._rs_from_dataset(e, unit.sample_size)
+                    else:
+                        # searcher_kwargs belong to the spec's named searcher;
+                        # other algorithms on the matrix axis use their own
+                        # defaults (SA would reject GA's pop_size, etc.)
+                        kwargs = (
+                            spec.searcher_kwargs
+                            if unit.algo == spec.searcher
+                            else {}
+                        )
+                        searcher = make_searcher(
+                            unit.algo, self.space, seed=exp_seed, **kwargs
+                        )
+                        tr = searcher.run(
+                            measurement,
+                            unit.sample_size,
+                            dispatch=spec.dispatch,
+                            telemetry=tel,
+                        )
+                    finals[i] = measurement.measure_final(
+                        tr.best_config, spec.design.final_repeats
+                    )
+                    search_best[i] = tr.best_value
+                    n_used[i] = tr.n_samples
+                    # staged backends (pallas) report per-stage clocks;
+                    # unstaged ones report {} and the unit carries no breakdown
+                    for k, v in measurement.stage_times().items():
+                        stage_acc[k] = stage_acc.get(k, 0.0) + float(v)
+                if tel.enabled:
+                    tel.inc("experiments_completed")
+            if tel.enabled:
+                tel.inc("units_completed")
         wall = monotonic() - t0
+        counters: dict[str, float] = {}
+        if tel.enabled:
+            c1 = tel.counters_snapshot()
+            counters = {
+                k: v - c0.get(k, 0) for k, v in c1.items() if v != c0.get(k, 0)
+            }
         if self.verbose:
             print(
                 f"[session] {unit.algo:7s} S={unit.sample_size:4d} "
@@ -765,6 +903,7 @@ class TuningSession:
             n_samples_used=n_used,
             wall_s=wall,
             stage_s=stage_acc,
+            counters=counters,
         )
 
     # -- dataset-served paths (paper section VI.B) ---------------------------
@@ -882,6 +1021,10 @@ class TuningSession:
         if dataset is not None:
             result["dataset_best"] = float(dataset.optimum)
         extra_out = {**self._backend_extra(self.measurement), **dict(extra or {})}
+        if self._last_telemetry:
+            # counter totals snapshotted at matrix completion (observability
+            # only — the report's Telemetry section reads them back)
+            extra_out["telemetry"] = self._last_telemetry
         if self._last_cell_walls:
             # per-cell search cost (sum of unit wall-clocks, parallel or
             # not), recorded by the work-unit layer, with the staged
@@ -940,6 +1083,7 @@ def tune_matrix(
     out_dir: str | None = None,
     verbose: bool = False,
     extra: dict | None = None,
+    telemetry_dir: str | None = None,
 ) -> MatrixResults:
     """Run the (algorithms x design) experiment matrix described by ``spec``.
 
@@ -954,30 +1098,48 @@ def tune_matrix(
     store.  When ``out_dir`` is given, the full results land in
     ``<cache_key>.npz`` with a versioned :class:`RunRecord` JSON (including
     the backend's true optimum, when it can compute one) next to it.
+
+    ``telemetry_dir`` enables span tracing: the run appends JSONL trace
+    events to ``<telemetry_dir>/trace.jsonl`` (parallel workers write
+    ``trace.shard<k>.jsonl`` beside their shard stores, merged at join) —
+    inspect with ``python -m repro.telemetry <telemetry_dir>``.  Pure
+    observability: results, stores, and journals are bit-identical with it
+    on or off.
     """
-    session = TuningSession(spec, verbose=verbose)
+    telemetry = None
+    if telemetry_dir is not None:
+        from ..telemetry.events import TRACE_FILE
+        from ..telemetry.tracer import Telemetry
+
+        os.makedirs(telemetry_dir, exist_ok=True)
+        telemetry = Telemetry(os.path.join(telemetry_dir, TRACE_FILE))
+    session = TuningSession(spec, verbose=verbose, telemetry=telemetry)
     t0 = monotonic()
-    results = session.run_matrix(
-        shards=shards,
-        executor=executor,
-        max_workers=max_workers,
-        resume=resume,
-        unit_experiments=unit_experiments,
-        futures_pool=futures_pool,
-        pipeline_workers=pipeline_workers,
-    )
-    if out_dir is not None:
-        name = (spec.cache_key or spec.default_cache_key()).replace("/", "_")
-        os.makedirs(out_dir, exist_ok=True)
-        artifact = f"{name}.npz"
-        results.save(os.path.join(out_dir, artifact))
-        record = session.make_record(
-            results,
-            wall_s=monotonic() - t0,
-            artifact=artifact,
-            extra=extra,
-            with_optimum=True,
+    try:
+        results = session.run_matrix(
+            shards=shards,
+            executor=executor,
+            max_workers=max_workers,
+            resume=resume,
+            unit_experiments=unit_experiments,
+            futures_pool=futures_pool,
+            pipeline_workers=pipeline_workers,
         )
-        record.save(os.path.join(out_dir, f"{name}.json"))
-        session.last_record = record
+        if out_dir is not None:
+            name = (spec.cache_key or spec.default_cache_key()).replace("/", "_")
+            os.makedirs(out_dir, exist_ok=True)
+            artifact = f"{name}.npz"
+            results.save(os.path.join(out_dir, artifact))
+            record = session.make_record(
+                results,
+                wall_s=monotonic() - t0,
+                artifact=artifact,
+                extra=extra,
+                with_optimum=True,
+            )
+            record.save(os.path.join(out_dir, f"{name}.json"))
+            session.last_record = record
+    finally:
+        if telemetry is not None:
+            telemetry.close()
     return results

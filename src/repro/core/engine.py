@@ -22,6 +22,7 @@ from typing import Sequence
 
 import numpy as np
 
+from ..telemetry.null import NULL_TELEMETRY
 from .measurement import BaseMeasurement
 from .searchers.base import Searcher, TuningResult
 from .space import Config
@@ -35,6 +36,7 @@ def drive(
     budget: int,
     dispatch: str = "batch",
     batch_size: int | None = None,
+    telemetry=None,
 ) -> TuningResult:
     """Run ``searcher`` to completion against ``measurement``.
 
@@ -43,21 +45,33 @@ def drive(
     same proposals in the same order, so for a dispatch-invariant backend the
     histories are identical.  ``batch_size`` optionally caps how many configs
     are asked per iteration (e.g. to bound a remote executor's batch).
+    ``telemetry`` (a :mod:`repro.telemetry` sink; default no-op) wraps each
+    ask/tell iteration in a ``round`` span and counts the non-finite
+    penalties told to the searcher — observability only, the loop's results
+    are identical with or without it.
     """
     if dispatch not in DISPATCH_MODES:
         raise ValueError(f"dispatch must be one of {DISPATCH_MODES}")
+    tel = telemetry if telemetry is not None else NULL_TELEMETRY
     searcher.start(budget)
+    rnd = 0
     while True:
         configs = searcher.ask(batch_size)
         if not configs:
             break
-        if dispatch == "batch":
-            values = measurement.measure_batch(configs)
-        else:
-            values = np.array(
-                [measurement.measure(c) for c in configs], dtype=np.float64
-            )
-        searcher.tell(configs, values)
+        with tel.span("round", round=rnd, algo=searcher.name, asked=len(configs)):
+            if dispatch == "batch":
+                values = measurement.measure_batch(configs)
+            else:
+                values = np.array(
+                    [measurement.measure(c) for c in configs], dtype=np.float64
+                )
+            searcher.tell(configs, values)
+        if tel.enabled:
+            bad = int(len(values) - np.count_nonzero(np.isfinite(values)))
+            if bad:
+                tel.inc("inf_penalties_told", bad)
+        rnd += 1
     return searcher.finish()
 
 
@@ -212,6 +226,10 @@ class DiskCachedMeasurement(BaseMeasurement):
             reason = self._inner.reason_for(config)
             self._store.put_meta(key, reason or "non-finite measurement")
 
+    def set_telemetry(self, telemetry) -> None:
+        super().set_telemetry(telemetry)
+        self._inner.set_telemetry(telemetry)
+
     def measure(self, config: Config) -> float:
         self.n_samples += 1
         self.n_dispatches += 1
@@ -221,8 +239,12 @@ class DiskCachedMeasurement(BaseMeasurement):
             v = self._inner.measure(config)
             self.n_misses += 1
             self._record(k, config, v)
+            if self.telemetry.enabled:
+                self.telemetry.inc("store_misses")
         else:
             self._inner.skip_samples(1)
+            if self.telemetry.enabled:
+                self.telemetry.inc("store_hits")
         return float(v)
 
     def measure_batch(self, configs: Sequence[Config]) -> np.ndarray:
@@ -234,6 +256,12 @@ class DiskCachedMeasurement(BaseMeasurement):
             [np.nan if v is None else v for v in cached], dtype=np.float64
         )
         miss = np.array([v is None for v in cached], dtype=bool)
+        if self.telemetry.enabled:
+            n_miss = int(miss.sum())
+            if n_miss:
+                self.telemetry.inc("store_misses", n_miss)
+            if len(configs) - n_miss:
+                self.telemetry.inc("store_hits", len(configs) - n_miss)
         if not miss.any():
             self._inner.skip_samples(len(configs))
             return vals

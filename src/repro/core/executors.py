@@ -169,6 +169,9 @@ def recover_shard_stores(session) -> int:
         os.path.join(d, f) for f in os.listdir(d) if pattern.fullmatch(f)
     )
     merge_shard_stores(session, leftovers)
+    # a killed run's workers also leave trace.shard<k>.jsonl files beside the
+    # parent trace; fold them in so the resumed trace keeps their spans
+    session.telemetry.recover()
     return len(leftovers)
 
 
@@ -222,6 +225,10 @@ def _make_payloads(
         and os.path.exists(session._store_path)
         else None
     )
+    # telemetry fan-out: each worker appends to its own trace.shard<k>.jsonl
+    # beside the parent trace (None when telemetry is off — workers then run
+    # the exact disabled path)
+    tel = session.telemetry
     return [
         {
             "spec": spec_dict,
@@ -229,6 +236,8 @@ def _make_payloads(
             "store_path": _shard_store_path(session, k),
             "base_store_path": base_store_path,
             "dataset": dataset_payload,
+            "trace_path": tel.shard_path(k),
+            "trace_src": tel.shard_src(k),
         }
         for k in range(n)
     ]
@@ -243,7 +252,16 @@ def _unit_worker(payload: dict) -> list[dict]:
     from .dataset import SampleDataset
 
     spec = TuningSpec.from_dict(payload["spec"])
-    session = TuningSession(spec, store_path=payload["store_path"])
+    telemetry = None
+    if payload.get("trace_path") is not None:
+        from ..telemetry.tracer import Telemetry
+
+        telemetry = Telemetry(
+            payload["trace_path"], src=payload.get("trace_src") or "shard"
+        )
+    session = TuningSession(
+        spec, store_path=payload["store_path"], telemetry=telemetry
+    )
     base_path = payload.get("base_store_path")
     if (
         base_path is not None
@@ -260,13 +278,26 @@ def _unit_worker(payload: dict) -> list[dict]:
         )
     journal = session.unit_journal()
     out = []
-    for d in payload["units"]:
-        result = session.run_unit(ExperimentUnit.from_dict(d))
-        if journal is not None:
-            journal.put(result)
-        out.append(result.to_dict())
-    session.save_store()
+    try:
+        for d in payload["units"]:
+            result = session.run_unit(ExperimentUnit.from_dict(d))
+            if journal is not None:
+                journal.put(result)
+            out.append(result.to_dict())
+        session.save_store()
+    finally:
+        if telemetry is not None:
+            # flush the shard trace (counters event + fh) even on a crash, so
+            # the parent's fail-fast absorb keeps the spans written so far
+            telemetry.close()
     return out
+
+
+def _absorb_trace_shards(plan: ExecutionPlan, payloads: list[dict]) -> None:
+    """Fold worker trace shards into the parent trace, deterministically
+    (shard-index order; each shard's own event order preserved)."""
+    paths = [p.get("trace_path") for p in payloads]
+    plan.session.telemetry.absorb([p for p in paths if p is not None])
 
 
 def _collect(plan: ExecutionPlan, payloads: list[dict],
@@ -274,6 +305,7 @@ def _collect(plan: ExecutionPlan, payloads: list[dict],
     merge_shard_stores(
         plan.session, [p["store_path"] for p in payloads]
     )
+    _absorb_trace_shards(plan, payloads)
     return [
         UnitResult.from_dict(d) for results in worker_results for d in results
     ]
@@ -302,6 +334,7 @@ def _drain_futures(plan: ExecutionPlan, payloads: list[dict],
             f.cancel()
         concurrent.futures.wait(futures)
         merge_shard_stores(plan.session, [p["store_path"] for p in payloads])
+        _absorb_trace_shards(plan, payloads)
         raise
     return results
 

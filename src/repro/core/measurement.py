@@ -24,6 +24,7 @@ from typing import Callable, Protocol, Sequence
 
 import numpy as np
 
+from ..telemetry.null import NULL_TELEMETRY
 from .clock import monotonic
 from .space import Config
 
@@ -98,6 +99,15 @@ class BaseMeasurement:
     def __init__(self) -> None:
         self.n_samples = 0
         self.n_dispatches = 0
+        #: telemetry sink (observability only — never feeds values); the
+        #: no-op default keeps the disabled path identical to the old code
+        self.telemetry = NULL_TELEMETRY
+
+    def set_telemetry(self, telemetry) -> None:
+        """Attach a telemetry sink (``None`` resets to the no-op default).
+        Wrapper measurements forward to their inner backend so stage events
+        and counters come from the layer that actually does the work."""
+        self.telemetry = telemetry if telemetry is not None else NULL_TELEMETRY
 
     def _measure_one(self, config: Config) -> float:  # pragma: no cover
         raise NotImplementedError
@@ -254,6 +264,10 @@ class CachedMeasurement(BaseMeasurement):
 
     def skip_samples(self, n: int) -> None:
         self._inner.skip_samples(n)
+
+    def set_telemetry(self, telemetry) -> None:
+        super().set_telemetry(telemetry)
+        self._inner.set_telemetry(telemetry)
 
     def provenance(self) -> dict:
         return self._inner.provenance()

@@ -187,7 +187,11 @@ class Searcher(ABC):
 
     # -- drivers --------------------------------------------------------------
     def run(
-        self, measurement: BaseMeasurement, budget: int, dispatch: str = "batch"
+        self,
+        measurement: BaseMeasurement,
+        budget: int,
+        dispatch: str = "batch",
+        telemetry=None,
     ) -> TuningResult:
         """Drive a full search: ``dispatch="batch"`` routes each proposal
         batch through ``measurement.measure_batch`` (the hot path);
@@ -201,7 +205,8 @@ class Searcher(ABC):
         """
         from ..engine import drive   # local import: engine depends on this module
 
-        return drive(self, measurement, budget, dispatch=dispatch)
+        return drive(self, measurement, budget, dispatch=dispatch,
+                     telemetry=telemetry)
 
     # -- internals ------------------------------------------------------------
     def _require_session(self) -> "_Session":

@@ -114,7 +114,9 @@ class UnitResult:
     as plain dicts.  ``stage_s`` is the unit's per-stage wall-clock breakdown
     (``{"screen": ..., "compile": ..., "time": ...}``) when the backend is a
     staged pipeline; ``{}`` for unstaged backends and pre-breakdown journal
-    entries.
+    entries.  ``counters`` is the unit's telemetry counter delta (compiles,
+    cache hits, invalid configs...) — observability only, ``{}`` when
+    telemetry is disabled, never part of the unit's scientific identity.
     """
 
     unit: ExperimentUnit
@@ -123,6 +125,7 @@ class UnitResult:
     n_samples_used: np.ndarray
     wall_s: float = 0.0
     stage_s: dict = field(default_factory=dict)
+    counters: dict = field(default_factory=dict)
 
     def __post_init__(self):
         n = self.unit.n_unit_exp
@@ -143,6 +146,7 @@ class UnitResult:
             "n_samples_used": [int(v) for v in self.n_samples_used],
             "wall_s": float(self.wall_s),
             "stage_s": {k: float(v) for k, v in self.stage_s.items()},
+            "counters": {k: float(v) for k, v in self.counters.items()},
         }
 
     @classmethod
@@ -157,6 +161,9 @@ class UnitResult:
             wall_s=float(d.get("wall_s", 0.0)),
             stage_s={
                 str(k): float(v) for k, v in d.get("stage_s", {}).items()
+            },
+            counters={
+                str(k): float(v) for k, v in d.get("counters", {}).items()
             },
         )
 
@@ -408,6 +415,9 @@ class UnitJournal:
             wall_s=float(sum(b.wall_s * frac for b, _, frac in pieces)),
             stage_s=_sum_stage_s(
                 (b.stage_s, frac) for b, _, frac in pieces
+            ),
+            counters=_sum_stage_s(
+                (b.counters, frac) for b, _, frac in pieces
             ),
         )
 

@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import threading
 from concurrent.futures import Future, ThreadPoolExecutor
+from contextlib import contextmanager
 from typing import Callable, Sequence
 
 import numpy as np
@@ -150,6 +151,8 @@ class PallasMeasurement(BaseMeasurement):
             inputs = self._inputs
             self.n_compiles += 1
             self.run_compiles += 1
+        if self.telemetry.enabled:
+            self.telemetry.inc("compiles")
         run_cfg = self._run_config(cfg)
 
         def fn():
@@ -171,11 +174,29 @@ class PallasMeasurement(BaseMeasurement):
         return fn
 
     # -- pipeline stages -------------------------------------------------------
+    @contextmanager
+    def _staged(self, name: str, **attrs):
+        """Charge the stage clock AND (when telemetry is on) emit a ``stage``
+        trace event with the same duration — one timing source for both, so
+        the trace's per-stage totals reconcile exactly with ``stage_times``.
+        Thread-safe like the clock: prefetch pool threads use it too."""
+        t0 = monotonic()
+        try:
+            yield
+        finally:
+            dur = monotonic() - t0
+            self.clock.add(name, dur)
+            if self.telemetry.enabled:
+                self.telemetry.stage(
+                    name, dur,
+                    **{k: v for k, v in attrs.items() if v is not None},
+                )
+
     def _stage_screen(self, config: Config) -> InvalidMeasurement | None:
         """Validity pre-screen; ``None`` means the config may compile."""
         if not self.validate:
             return None
-        with self.clock.stage("screen"):
+        with self._staged("screen"):
             reason = validate_config(
                 self.workload, config, self.vmem_limit, self.max_grid
             )
@@ -191,21 +212,23 @@ class PallasMeasurement(BaseMeasurement):
             hit = self._compiled.get(gkey)
             fut = None if hit is not None else self._inflight.pop(gkey, None)
         if hit is not None:
+            if self.telemetry.enabled:
+                self.telemetry.inc("compile_cache_hits")
             return hit
         if fut is not None:
             # the pool thread charged the compile stage; waiting here is the
             # pipeline's (ideally zero) bubble
             return fut.result()
-        with self.clock.stage("compile"):
+        with self._staged("compile", key=str(gkey)):
             return self._compile_now(config, gkey)
 
     def _stage_time(
-        self, fn: Callable, repeats: int
+        self, fn: Callable, repeats: int, key: str | None = None
     ) -> list[float] | InvalidMeasurement:
         """Strictly sequential fenced timing — never overlapped, so device
         measurements stay honest even while the prefetcher compiles."""
         times = []
-        with self.clock.stage("time"):
+        with self._staged("time", key=key):
             for _ in range(repeats):
                 try:
                     t0 = self._timer()
@@ -224,12 +247,22 @@ class PallasMeasurement(BaseMeasurement):
         log: dict[str, list[float]],
     ) -> float:
         """Fold a stage-pipeline outcome into the served value + the logs."""
-        if isinstance(out, InvalidMeasurement):
-            self.invalid[key] = out
-            self._run_invalid.add(key)
-            return out.penalty
-        log[key] = out
-        return float(np.median(out))
+        with self._staged("record", key=key):
+            if isinstance(out, InvalidMeasurement):
+                self.invalid[key] = out
+                self._run_invalid.add(key)
+                if self.telemetry.enabled:
+                    # histogram by validity rule (align:/block:/grid:/vmem:)
+                    # or by the failing stage for compile/run penalties
+                    rule = (
+                        out.reason.split(":", 1)[0]
+                        if out.stage == "validity"
+                        else out.stage
+                    )
+                    self.telemetry.inc(f"invalid.{rule}")
+                return out.penalty
+            log[key] = out
+            return float(np.median(out))
 
     def _measure_repeats(
         self, config: Config, repeats: int
@@ -240,7 +273,7 @@ class PallasMeasurement(BaseMeasurement):
         fn = self._stage_compile(config)
         if isinstance(fn, InvalidMeasurement):
             return fn
-        return self._stage_time(fn, repeats)
+        return self._stage_time(fn, repeats, key=config_key(config))
 
     def _measure_one(self, config: Config) -> float:
         return self._stage_record(
@@ -272,9 +305,12 @@ class PallasMeasurement(BaseMeasurement):
                 self._inflight[gkey] = self._pool.submit(
                     self._prefetch_task, dict(cfg), gkey
                 )
+                depth = len(self._inflight)
+            if self.telemetry.enabled:
+                self.telemetry.gauge("prefetch_inflight", depth)
 
     def _prefetch_task(self, cfg: Config, gkey: tuple):
-        with self.clock.stage("compile"):
+        with self._staged("compile", key=str(gkey)):
             return self._compile_now(cfg, gkey)
 
     def measure_batch(self, configs: Sequence[Config]) -> np.ndarray:

@@ -47,6 +47,14 @@ _ALL = (
         "is injected into backend_kwargs but not excluded by a cache-key / "
         "journal-namespace / fingerprint sink",
     ),
+    # -- OBS: observability isolation ----------------------------------------
+    Rule(
+        "OBS001",
+        "OBS",
+        "a telemetry/trace identifier appears inside a cache-key / "
+        "journal-namespace / fingerprint sink — telemetry is a pure "
+        "observability knob and must never reach run identity",
+    ),
     # -- REG: registry completeness ------------------------------------------
     Rule(
         "REG001",

@@ -13,7 +13,7 @@ from __future__ import annotations
 import ast
 import os
 
-from . import det, lib, prov, ser
+from . import det, lib, obs, prov, ser
 from .catalog import resolve_select
 from .findings import Finding, apply_suppressions
 
@@ -84,6 +84,7 @@ def check_paths(
         findings += det.check_file(path, tree)
         findings += lib.check_file(path, tree)
         findings += ser.check_file(path, tree)
+        findings += obs.check_file(path, tree)
         prov_facts[path] = prov.collect_facts(path, tree)
     findings += prov.check_project(prov_facts)
     if registry:

@@ -1,0 +1,57 @@
+"""repro.telemetry — span tracing, metrics, and live progress for runs.
+
+The observability layer: a :class:`Telemetry` writer emits append-only
+JSONL trace events (spans over the fixed hierarchy matrix > cell > unit >
+ask/tell round > experiment > pipeline stage, plus counters and gauges);
+:data:`NULL_TELEMETRY` is the no-op default so the disabled path stays the
+current code path.  Workers write ``trace.shard<k>.jsonl`` beside their
+shard stores and the parent merges them deterministically at join
+(:mod:`.merge`).  Consumers: ``python -m repro.telemetry`` (summarize /
+tail / export), :mod:`.progress` (the ``--progress`` reporter), and the
+report layer's Telemetry section.
+
+Telemetry is a pure observability knob — never part of cache keys, journal
+namespaces, or spec fingerprints (staticcheck rule OBS001), and a
+telemetry-enabled run produces bit-identical measurement stores to a
+disabled one.
+
+Enable it per run::
+
+    import repro
+    from repro.core import ExperimentDesign, TuningSpec
+
+    spec = TuningSpec(kernel="harris", algorithms=("rs", "ga"),
+                      design=ExperimentDesign.scaled(budget=200))
+    repro.tune_matrix(spec, out_dir="results/demo",
+                      telemetry_dir="results/demo")
+    # then: python -m repro.telemetry summarize results/demo
+"""
+
+from __future__ import annotations
+
+from .events import TRACE_FILE, read_events, read_run, trace_paths
+from .export import chrome_trace, export_chrome
+from .null import NULL_TELEMETRY, NullTelemetry
+from .progress import ProgressReporter, ProgressState, format_progress, scan_progress
+from .summarize import render_summary, stage_percentiles, summarize
+from .tracer import Telemetry, for_run_dir
+
+__all__ = [
+    "NULL_TELEMETRY",
+    "TRACE_FILE",
+    "NullTelemetry",
+    "ProgressReporter",
+    "ProgressState",
+    "Telemetry",
+    "chrome_trace",
+    "export_chrome",
+    "for_run_dir",
+    "format_progress",
+    "read_events",
+    "read_run",
+    "render_summary",
+    "scan_progress",
+    "stage_percentiles",
+    "summarize",
+    "trace_paths",
+]

@@ -1,0 +1,18 @@
+"""OBS fixture: telemetry identifiers leaking into identity sinks.
+
+The sinks deliberately avoid ``backend_kwargs`` so the corpus-wide PROV001
+liveness (from ``prov_bad/``) cannot also fire on them — this file pins
+OBS001 alone.
+"""
+
+
+class Spec:
+    kernel = "k"
+    trace_path = "trace.jsonl"
+
+    def default_cache_key(self) -> str:
+        return f"{self.kernel}/{self.trace_path}"
+
+    def journal_namespace(self) -> str:
+        mode = "telemetry"
+        return f"{self.kernel}|{mode}"

@@ -1,0 +1,9 @@
+"""OBS fixture: the same leak, explicitly allowed on the mention line."""
+
+
+class Spec:
+    kernel = "k"
+    trace_path = "trace.jsonl"
+
+    def default_cache_key(self) -> str:
+        return f"{self.kernel}/{self.trace_path}"  # repro: allow[OBS001]

@@ -169,7 +169,7 @@ def test_provenance_counters_are_per_run():
     first = m.provenance()
     assert first["n_compiles"] > 0 and first["n_invalid"] > 0
     assert first["n_compiles_total"] == m.n_compiles
-    assert set(first["stage_s"]) == {"screen", "compile", "time"}
+    assert set(first["stage_s"]) == {"screen", "compile", "time", "record"}
 
     m.reset()
     blank = m.provenance()
