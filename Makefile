@@ -22,9 +22,16 @@ smoke-pallas:
 # --progress into a fresh store: telemetry is a pure observability knob, so
 # the traced store's measurement values must be identical to the untraced
 # one, and the merged trace must drive summarize + Chrome export
-# (docs/telemetry.md)
+# (docs/telemetry.md).  A fourth pass re-runs under --scheduler static:
+# the scheduler is a pure speed knob, so its store must be byte-identical
+# to the (default) stealing passes, whose trace must carry the steal
+# counters.  Finally, two serial pallas runs against FRESH stores sharing
+# one --compile-cache dir: the cold pass populates it, and the warm pass —
+# a cold process re-measuring everything — must report compiles == 0
 smoke-matrix:
-	rm -rf results/smoke_matrix results/smoke_matrix_tel
+	rm -rf results/smoke_matrix results/smoke_matrix_tel \
+	  results/smoke_matrix_static results/smoke_cc_cold results/smoke_cc_warm \
+	  results/smoke_cc_cache
 	PYTHONPATH=src $(PYTHON) -m benchmarks.paper_matrix --design scaled --budget 100 \
 	  --bench add --chip v5e --algos rs,ga --out results/smoke_matrix \
 	  --executor process --max-workers 2 --resume
@@ -42,6 +49,24 @@ smoke-matrix:
 	PYTHONPATH=src $(PYTHON) -m repro.telemetry summarize results/smoke_matrix_tel
 	PYTHONPATH=src $(PYTHON) -m repro.telemetry export results/smoke_matrix_tel
 	test -f results/smoke_matrix_tel/trace_chrome.json
+	PYTHONPATH=src $(PYTHON) -m benchmarks.paper_matrix --design scaled --budget 100 \
+	  --bench add --chip v5e --algos rs,ga --out results/smoke_matrix_static \
+	  --executor process --max-workers 2 --scheduler static --resume
+	$(PYTHON) tools/compare_stores.py \
+	  results/smoke_matrix/add_v5e_cache.json \
+	  results/smoke_matrix_static/add_v5e_cache.json
+	$(PYTHON) tools/assert_counters.py results/smoke_matrix_tel \
+	  "units_completed>0" --plan scheduler=steal
+	PYTHONPATH=src $(PYTHON) -m benchmarks.paper_matrix --design smoke \
+	  --backend pallas --bench add --algos rs --out results/smoke_cc_cold \
+	  --compile-cache results/smoke_cc_cache --telemetry
+	$(PYTHON) tools/assert_counters.py results/smoke_cc_cold \
+	  "compiles>0" "pcache.stores>0"
+	PYTHONPATH=src $(PYTHON) -m benchmarks.paper_matrix --design smoke \
+	  --backend pallas --bench add --algos rs --out results/smoke_cc_warm \
+	  --compile-cache results/smoke_cc_cache --telemetry
+	$(PYTHON) tools/assert_counters.py results/smoke_cc_warm \
+	  "compiles==0" "pcache.hits>0"
 
 # tier-2: the device executor on a host faked to 4 chips
 # (XLA_FLAGS=--xla_force_host_platform_device_count=4) — the merged store's

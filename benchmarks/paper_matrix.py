@@ -106,6 +106,8 @@ def run_combo(bench: str, chip_name: str, design: ExperimentDesign, out_dir: str
               executor: str | None = None, max_workers: int | None = None,
               resume: bool = False,
               pipeline_workers: int | None = None,
+              scheduler: str = "steal",
+              compile_cache: str | None = None,
               telemetry_dir: str | None = None,
               progress: bool = False) -> None:
     spec = combo_spec(bench, chip_name, design, out_dir, algorithms=algorithms,
@@ -124,6 +126,7 @@ def run_combo(bench: str, chip_name: str, design: ExperimentDesign, out_dir: str
         repro.tune_matrix(spec, shards=shards, executor=executor,
                           max_workers=max_workers, resume=resume,
                           pipeline_workers=pipeline_workers,
+                          scheduler=scheduler, compile_cache=compile_cache,
                           out_dir=out_dir, verbose=verbose,
                           telemetry_dir=telemetry_dir)
     finally:
@@ -144,7 +147,11 @@ def run_combo(bench: str, chip_name: str, design: ExperimentDesign, out_dir: str
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--design", choices=("paper", "scaled"), default="scaled")
+    ap.add_argument("--design", choices=("paper", "scaled", "smoke"),
+                    default="scaled",
+                    help="experiment design: the paper-exact matrix, the "
+                         "budget-scaled one, or the tiny smoke design "
+                         "(2 cells — CI-sized real-measurement runs)")
     ap.add_argument("--budget", type=int, default=2000,
                     help="per-cell sample budget for --design scaled")
     ap.add_argument("--shards", type=int, default=1,
@@ -164,6 +171,18 @@ def main() -> None:
                          "pallas measurement pipeline (0/omitted: inline "
                          "compile-then-time; results are identical either "
                          "way)")
+    ap.add_argument("--scheduler", choices=("steal", "static"),
+                    default="steal",
+                    help="how parallel executors hand units to workers: "
+                         "'steal' over-splits cells by predicted cost and "
+                         "lets workers pull from a shared queue; 'static' "
+                         "is the legacy one-partition-per-worker schedule "
+                         "(results are bit-identical either way)")
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="persistent on-disk compile-artifact cache for the "
+                         "staged pallas backend, shared across worker "
+                         "processes and across runs (a warm re-run "
+                         "recompiles nothing, even from a cold process)")
     ap.add_argument("--resume", action="store_true",
                     help="replay units journaled in the measurement store "
                          "by an interrupted run (zero re-measurements)")
@@ -197,12 +216,15 @@ def main() -> None:
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
 
-    design = (
-        ExperimentDesign.paper()
-        if args.design == "paper"
-        else ExperimentDesign.scaled(budget=args.budget)
-    )
-    tag = "paper_matrix" if args.design == "paper" else f"matrix_{args.budget}"
+    if args.design == "paper":
+        design = ExperimentDesign.paper()
+        tag = "paper_matrix"
+    elif args.design == "smoke":
+        design = ExperimentDesign.smoke()
+        tag = "matrix_smoke"
+    else:
+        design = ExperimentDesign.scaled(budget=args.budget)
+        tag = f"matrix_{args.budget}"
     if args.backend != "costmodel":
         tag = f"{tag}_{args.backend}"
     out_dir = args.out or os.path.join("results", tag)
@@ -226,6 +248,8 @@ def main() -> None:
                       backend=args.backend, executor=args.executor,
                       max_workers=args.max_workers, resume=args.resume,
                       pipeline_workers=args.pipeline_workers,
+                      scheduler=args.scheduler,
+                      compile_cache=args.compile_cache,
                       telemetry_dir=(
                           out_dir if (args.telemetry or args.progress) else None
                       ),

@@ -236,6 +236,120 @@ def table_pipeline_overlap(n_cfgs: int = 8, compile_ms: float = 25.0) -> None:
     )
 
 
+def table_scheduler_tail(slow_ms: float = 30.0, workers: int = 2) -> None:
+    """Work-stealing vs static scheduling around a straggler cell: one cell's
+    experiments each pay a slow synthetic dispatch (standing in for a
+    geometry that compiles/runs far slower than its neighbours), so the
+    static one-partition-per-worker schedule stalls its join behind whichever
+    worker drew the straggler while the stealing scheduler splits it by
+    predicted cost and rebalances.  Values must be identical across serial /
+    static / steal; the wall-clock ratio is the PR's tracked perf number."""
+    from concurrent.futures import ThreadPoolExecutor
+
+    from repro.core.backends import BACKENDS, Backend, register_backend
+    from repro.core.measurement import BaseMeasurement
+    from repro.core.runner import stable_seed
+    from repro.core.space import Param, SearchSpace
+
+    slow_s, n_exp, seed0 = 32, 4, 3
+
+    class StragglerMeasurement(BaseMeasurement):
+        """Deterministic pure-function values; experiments whose seed is in
+        ``slow_seeds`` pay one ``slow_ms`` sleep per search dispatch."""
+
+        def __init__(self, slow: bool, sleep_s: float):
+            super().__init__()
+            self._slow = slow
+            self._sleep_s = sleep_s
+
+        def _value(self, config) -> float:
+            key = ",".join(f"{k}={v}" for k, v in sorted(config.items()))
+            return 0.1 + (stable_seed(key) % 4096) / 4096.0
+
+        def _measure_one(self, config) -> float:
+            return self._value(config)
+
+        def measure_batch(self, configs):
+            self.n_samples += len(configs)
+            self.n_dispatches += 1
+            if self._slow:
+                time.sleep(self._sleep_s)
+            return np.array([self._value(c) for c in configs], dtype=np.float64)
+
+    # the straggler cell is the largest sample size: the cost model's
+    # samples-x-experiments weight marks it most expensive, so the stealing
+    # split slices it first
+    slow_seeds = tuple(stable_seed(seed0, "rs", slow_s, e) for e in range(n_exp))
+    if "straggler" not in BACKENDS:
+        register_backend(
+            Backend(
+                name="straggler",
+                make=lambda kernel="straggler", seed=0, slow_seeds=(),
+                slow_ms=0.0, **_: StragglerMeasurement(
+                    seed in set(slow_seeds), slow_ms / 1e3
+                ),
+                default_space=lambda kernel="straggler", **_: SearchSpace(
+                    [Param.int_range("t_x", 1, 16), Param.int_range("t_y", 1, 16)]
+                ),
+            )
+        )
+    spec = TuningSpec(
+        kernel="straggler",
+        backend="straggler",
+        backend_kwargs={"slow_seeds": list(slow_seeds), "slow_ms": slow_ms},
+        searcher="rs",
+        algorithms=("rs",),
+        design=ExperimentDesign(
+            sample_sizes=(slow_s, 8, 10, 12),
+            n_experiments=(n_exp,) * 4,
+            final_repeats=3,
+        ),
+        dataset_size=None,
+        seed=seed0,
+    )
+
+    def run(**kw):
+        session = TuningSession(spec)
+        t0 = time.perf_counter()
+        res = session.run_matrix(**kw)
+        return res, time.perf_counter() - t0
+
+    serial, t_serial = run()
+    static, t_static = run(
+        executor="futures", max_workers=workers, scheduler="static",
+        futures_pool=ThreadPoolExecutor(max_workers=workers),
+    )
+    steal, t_steal = run(
+        executor="futures", max_workers=workers,
+        futures_pool=ThreadPoolExecutor(max_workers=workers),
+    )
+    same = int(
+        all(
+            np.array_equal(
+                serial.cells[k].final_values, other.cells[k].final_values
+            )
+            and np.array_equal(
+                serial.cells[k].search_best_values,
+                other.cells[k].search_best_values,
+            )
+            for other in (static, steal)
+            for k in serial.cells
+        )
+    )
+    assert same, "scheduler changed values — the speed-knob contract broke"
+    print(f"scheduler_tail/serial,{t_serial*1e6:.0f},cells=4 straggler=S32")
+    print(
+        f"scheduler_tail/static,{t_static*1e6:.0f},"
+        f"workers={workers} speedup_vs_serial="
+        f"{t_serial/max(t_static,1e-9):.2f}x"
+    )
+    print(
+        f"scheduler_tail/steal,{t_steal*1e6:.0f},"
+        f"workers={workers} speedup_vs_static="
+        f"{t_static/max(t_steal,1e-9):.2f}x identical={same}"
+    )
+
+
 def table_telemetry_overhead(budget: int = 400) -> None:
     """Tracing cost on the hot path: the same tuning run with the default
     no-op telemetry vs a real JSONL tracer.  The tuned result must be
@@ -299,6 +413,7 @@ def main() -> None:
     table_kernels()
     table_pallas_backend()
     table_pipeline_overlap()
+    table_scheduler_tail()
     table_telemetry_overhead()
     print("# paper-claims validation")
     checks = validate(results_dir)

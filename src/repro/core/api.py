@@ -75,6 +75,11 @@ from .workunits import (
 SPEC_VERSION = 1
 RUN_RECORD_VERSION = 1
 
+#: units per worker the stealing scheduler aims for — enough queue slack to
+#: rebalance around a straggler cell without shrinking units so far that
+#: per-unit dispatch overhead dominates
+STEAL_OVERSPLIT = 4
+
 __all__ = [
     "RUN_RECORD_VERSION",
     "SPEC_VERSION",
@@ -227,10 +232,13 @@ class TuningSpec:
         return self.algorithms if self.algorithms is not None else (self.searcher,)
 
     def default_cache_key(self) -> str:
-        # pipeline_workers changes how fast measurements happen, never what
-        # they are — leaving it out keeps warm caches warm across the knob
+        # pipeline_workers / compile_cache change how fast measurements
+        # happen, never what they are — leaving them out keeps warm caches
+        # warm across the knobs
         kwargs = {
-            k: v for k, v in self.backend_kwargs.items() if k != "pipeline_workers"
+            k: v
+            for k, v in self.backend_kwargs.items()
+            if k not in ("pipeline_workers", "compile_cache")
         }
         # the common costmodel case keeps its compact, store-compatible form
         if set(kwargs) == {"chip"}:
@@ -595,6 +603,8 @@ class TuningSession:
         unit_experiments: int | None = None,
         futures_pool=None,
         pipeline_workers: int | None = None,
+        scheduler: str = "steal",
+        compile_cache: str | None = None,
     ) -> MatrixResults:
         """Run the experiment matrix through the executor layer.
 
@@ -613,6 +623,15 @@ class TuningSession:
         pipeline (backends with ``Backend.pipeline``; the knob changes
         wall-clock, not results, so caches and journals stay valid across
         it).
+
+        ``scheduler`` picks how parallel executors hand units to workers:
+        ``"steal"`` (default) over-splits cells by cost-model-predicted
+        duration and lets workers pull units from a shared queue as they
+        free up; ``"static"`` is the legacy one-partition-per-worker
+        schedule.  ``compile_cache=DIR`` points staged backends at a
+        persistent on-disk compile-artifact cache shared across worker
+        processes and across runs.  Both are pure speed knobs: results,
+        stores, cache keys, and journals are bit-identical across them.
         """
         with self.telemetry.span("matrix", cache_key=self.cache_key):
             return self._run_matrix_impl(
@@ -623,6 +642,8 @@ class TuningSession:
                 unit_experiments=unit_experiments,
                 futures_pool=futures_pool,
                 pipeline_workers=pipeline_workers,
+                scheduler=scheduler,
+                compile_cache=compile_cache,
             )
 
     def _run_matrix_impl(
@@ -635,8 +656,14 @@ class TuningSession:
         unit_experiments: int | None,
         futures_pool,
         pipeline_workers: int | None,
+        scheduler: str = "steal",
+        compile_cache: str | None = None,
     ) -> MatrixResults:
         t0 = monotonic()
+        if scheduler not in ("steal", "static"):
+            raise ValueError(
+                f"unknown scheduler {scheduler!r}; use 'steal' or 'static'"
+            )
         if pipeline_workers is not None:
             if not self._backend.pipeline:
                 raise ValueError(
@@ -648,6 +675,19 @@ class TuningSession:
                 backend_kwargs={
                     **self.spec.backend_kwargs,
                     "pipeline_workers": int(pipeline_workers),
+                }
+            )
+        if compile_cache is not None:
+            if not self._backend.pipeline:
+                raise ValueError(
+                    f"backend {self.spec.backend!r} has no compile stage; "
+                    "compile_cache applies to staged backends only "
+                    "(BACKENDS[...].pipeline)"
+                )
+            self.spec = self.spec.replace(
+                backend_kwargs={
+                    **self.spec.backend_kwargs,
+                    "compile_cache": os.path.abspath(compile_cache),
                 }
             )
         cells = self.cells()
@@ -668,10 +708,20 @@ class TuningSession:
             name = "process" if workers > 1 else "serial"
         if name not in EXECUTORS:
             raise KeyError(f"unknown executor {name!r}; have {sorted(EXECUTORS)}")
+        # the stealing scheduler wants more units than workers so the queue
+        # can rebalance around stragglers; the static schedule keeps the
+        # legacy one-unit-per-worker floor (identical decomposition, and so
+        # identical journals, to every release before the scheduler existed)
+        oversplit = (
+            STEAL_OVERSPLIT
+            if scheduler == "steal" and EXECUTORS[name].parallel and workers > 1
+            else 1
+        )
         units = build_units(
             cells,
-            min_units=workers if EXECUTORS[name].parallel else 1,
+            min_units=(workers * oversplit) if EXECUTORS[name].parallel else 1,
             max_unit_experiments=unit_experiments,
+            cost=self._unit_cost(),
         )
         self.last_unit_plan = units
         journal = self.unit_journal()
@@ -699,6 +749,7 @@ class TuningSession:
                 "plan",
                 executor=name,
                 workers=workers,
+                scheduler=scheduler,
                 units=[u.key for u in pending],
                 units_total=len(units),
                 experiments_total=sum(u.n_unit_exp for u in units),
@@ -727,6 +778,7 @@ class TuningSession:
                 units=pending,
                 max_workers=min(workers, len(pending)),
                 futures_pool=futures_pool,
+                scheduler=scheduler,
             )
             fresh = run_units(run_name, plan)
         cell_results, self._last_cell_walls = merge_unit_results(
@@ -762,6 +814,30 @@ class TuningSession:
         return results
 
     # -- the work-unit layer --------------------------------------------------
+    def _unit_cost(self) -> Callable[[ExperimentUnit], float]:
+        """Predicted unit duration driving the stealing scheduler's initial
+        split: experiments x samples, scaled by the cost model's mean
+        per-measurement runtime for this spec's kernel/chip when it knows
+        them.  MUST be a pure deterministic function of the unit — the
+        decomposition is part of the journaled plan, so a resumed run has to
+        rebuild the exact same units.  Cost only shapes which units get
+        split first, never their results, so a fallback to the uniform
+        per-experiment weight (unknown kernels, live overrides) is safe."""
+        per_measure = 1.0
+        try:
+            from ..costmodel import CHIPS, WORKLOADS, mean_runtime_estimate
+
+            workload = WORKLOADS[self.spec.kernel]
+            chip = CHIPS[self.spec.backend_kwargs.get("chip", "v5e")]
+            per_measure = float(mean_runtime_estimate(workload, chip))
+        except Exception:
+            per_measure = 1.0
+
+        def cost(u: ExperimentUnit) -> float:
+            return float(u.n_unit_exp) * float(u.sample_size) * per_measure
+
+        return cost
+
     def journal_namespace(self) -> str | None:
         """Binds unit-journal entries to everything that changes a unit's
         numbers: the cache key plus a fingerprint of the FULL spec (searcher
@@ -776,10 +852,12 @@ class TuningSession:
         for k in ("store", "store_path"):
             d.pop(k, None)
         if isinstance(d.get("backend_kwargs"), dict):
-            # the pipeline knob changes execution speed, never results —
-            # journaled units stay valid with the prefetcher on or off
+            # the pipeline / persistent-compile-cache knobs change execution
+            # speed, never results — journaled units stay valid with the
+            # prefetcher or the artifact cache on or off
             bk = dict(d["backend_kwargs"])
             bk.pop("pipeline_workers", None)
+            bk.pop("compile_cache", None)
             d["backend_kwargs"] = bk
         try:
             fp = stable_seed(json.dumps(d, sort_keys=True))
@@ -1080,6 +1158,8 @@ def tune_matrix(
     unit_experiments: int | None = None,
     futures_pool=None,
     pipeline_workers: int | None = None,
+    scheduler: str = "steal",
+    compile_cache: str | None = None,
     out_dir: str | None = None,
     verbose: bool = False,
     extra: dict | None = None,
@@ -1098,6 +1178,15 @@ def tune_matrix(
     store.  When ``out_dir`` is given, the full results land in
     ``<cache_key>.npz`` with a versioned :class:`RunRecord` JSON (including
     the backend's true optimum, when it can compute one) next to it.
+
+    ``scheduler="steal"`` (default) over-splits cells by cost-model-predicted
+    duration and lets workers pull units from a shared queue as they free
+    up; ``scheduler="static"`` keeps the legacy one-partition-per-worker
+    schedule.  ``compile_cache=DIR`` points staged backends (pallas) at a
+    persistent on-disk compile-artifact cache shared across worker
+    processes and across runs — a warm re-run recompiles nothing even from
+    a cold process.  Both are pure speed knobs excluded from cache keys and
+    journal namespaces.
 
     ``telemetry_dir`` enables span tracing: the run appends JSONL trace
     events to ``<telemetry_dir>/trace.jsonl`` (parallel workers write
@@ -1124,6 +1213,8 @@ def tune_matrix(
             unit_experiments=unit_experiments,
             futures_pool=futures_pool,
             pipeline_workers=pipeline_workers,
+            scheduler=scheduler,
+            compile_cache=compile_cache,
         )
         if out_dir is not None:
             name = (spec.cache_key or spec.default_cache_key()).replace("/", "_")

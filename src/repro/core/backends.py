@@ -132,6 +132,7 @@ def _make_pallas(
     max_grid: int | None = None,
     validate: bool = True,
     pipeline_workers: int = 0,
+    compile_cache: str | None = None,
 ) -> BaseMeasurement:
     # lazy import: core must stay importable without jax/pallas_bench
     from ..pallas_bench import (
@@ -157,6 +158,7 @@ def _make_pallas(
         max_grid=max_grid if max_grid is not None else DEFAULT_MAX_GRID,
         validate=validate,
         pipeline_workers=pipeline_workers,
+        compile_cache=compile_cache,
     )
 
 

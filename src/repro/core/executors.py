@@ -6,12 +6,15 @@ a session, returning :class:`~repro.core.workunits.UnitResult` fragments the
 session merges deterministically by unit key.  Built-ins:
 
 * ``"serial"``  — the in-process loop; journals each completed unit.
-* ``"process"`` — ``multiprocessing`` (spawn) fan-out: units are grouped
-  round-robin across ``max_workers`` workers, each worker rebuilds the
-  session from the serialized spec, writes to its own ``store_path.shard<k>``
-  (seeded from the warm parent store), journals into it, and the parent
+* ``"process"`` — ``multiprocessing`` (spawn) fan-out.  Under the default
+  *work-stealing* scheduler each worker process builds ONE persistent
+  session at pool start (initializer), then pulls units one at a time from
+  the shared submit queue — a worker that finishes early simply takes the
+  next pending unit instead of idling behind a static partition.  Each
+  worker writes to its own ``store_path.shard<pid>`` (seeded from the warm
+  parent store), journals completed units into it, and the parent glob-
   merges shard stores when the pool joins.
-* ``"futures"`` — the same worker payload submitted to ANY
+* ``"futures"`` — the grouped worker payload submitted to ANY
   ``concurrent.futures.Executor``.  Pass a live pool via
   ``run_matrix(futures_pool=...)`` (a ``ThreadPoolExecutor``, a cluster
   client's pool adapter, ...); without one a spawn-context
@@ -19,19 +22,30 @@ session merges deterministically by unit key.  Built-ins:
   remote-executor seam: the payload is ``(spec_dict, unit dicts,
   store paths)`` and the results come back as plain JSON-able dicts, so an
   executor whose workers live on other hosts only needs to ship the payload
-  and a store path visible to the worker.
-* ``"device"``  — multi-chip fan-out WITHIN one process: the same payloads
-  run on worker threads, each pinned to one of ``jax.devices()`` via
-  ``jax.default_device``, with one shard store per device.  An 8-chip host
-  runs the matrix ~8x wider with no process spawn, no re-import, and a
-  shared in-memory compilation story per worker; merges are bit-identical
-  to ``serial`` because workers rebuild sessions from the same serialized
+  and a store path visible to the worker.  Under the stealing scheduler
+  every payload carries exactly one unit, so any pool balances the queue;
+  the cost is one session rebuild per unit (document-level knob: use
+  ``scheduler="static"`` for pools where rebuilds dominate).
+* ``"device"``  — multi-chip fan-out WITHIN one process: worker threads,
+  each pinned to one of ``jax.devices()`` via ``jax.default_device``, with
+  one shard store per device.  Under the stealing scheduler each thread
+  keeps a persistent session (compilation caches warm across units) and
+  pulls units as it frees up.  An 8-chip host runs the matrix ~8x wider
+  with no process spawn or re-import; merges are bit-identical to
+  ``serial`` because workers rebuild sessions from the same serialized
   spec and seeds derive from the spec alone.
+
+Scheduling: ``ExecutionPlan.scheduler`` selects ``"steal"`` (default — one
+unit per submission, ``as_completed`` streaming, telemetry counters for
+steals and a queue-depth gauge) or ``"static"`` (the round-robin
+one-payload-per-worker partition; same results, coarser balancing).  Unit
+*results* merge by unit key, so both schedules — and any completion order —
+are bit-identical to the serial loop.
 
 Parallel executors collect worker results as they complete and fail fast:
 the first worker exception cancels outstanding work, absorbs completed
-workers' shard stores (their journaled units survive into the parent), and
-re-raises.
+workers' shard stores (their journaled units survive into the parent) and
+trace shards, and re-raises.
 
 Worker crash/kill recovery: because workers journal completed units into
 their shard stores as they go, :func:`recover_shard_stores` can absorb
@@ -67,6 +81,7 @@ class ExecutionPlan:
     units: list[ExperimentUnit] = field(default_factory=list)
     max_workers: int = 1
     futures_pool: Any = None          # concurrent.futures.Executor, "futures" only
+    scheduler: str = "steal"          # "steal" (shared unit queue) | "static"
 
 
 @dataclass(frozen=True)
@@ -199,7 +214,23 @@ def _check_shippable(session) -> dict:
 def _make_payloads(
     plan: ExecutionPlan, spec_dict: dict
 ) -> list[dict]:
-    """Group units round-robin into at most ``max_workers`` payloads.
+    """Group units round-robin into at most ``max_workers`` payloads (the
+    static schedule — one payload per worker)."""
+    n = max(1, min(plan.max_workers, len(plan.units)))
+    return _payloads_for_groups(plan, spec_dict, [plan.units[k::n] for k in range(n)])
+
+
+def _make_unit_payloads(plan: ExecutionPlan, spec_dict: dict) -> list[dict]:
+    """One payload per unit (the stealing schedule for the generic futures
+    seam): any pool drains the queue in completion order, at the cost of a
+    session rebuild per unit."""
+    return _payloads_for_groups(plan, spec_dict, [[u] for u in plan.units])
+
+
+def _payloads_for_groups(
+    plan: ExecutionPlan, spec_dict: dict, groups: list[list[ExperimentUnit]]
+) -> list[dict]:
+    """One worker payload per unit group.
 
     The payload is the remote-executor seam: ``spec`` / ``units`` /
     ``store_path`` are plain JSON; ``dataset`` ships the parent's
@@ -208,8 +239,7 @@ def _make_payloads(
     ``TuningSpec.dataset_cache`` on a shared path instead).
     """
     session = plan.session
-    n = max(1, min(plan.max_workers, len(plan.units)))
-    groups = [plan.units[k::n] for k in range(n)]
+    n = len(groups)
     dataset = session._get_dataset()
     dataset_payload = (
         None if dataset is None else (dataset.indices, dataset.values)
@@ -324,11 +354,18 @@ def _drain_futures(plan: ExecutionPlan, payloads: list[dict],
     """
     import concurrent.futures
 
+    tel = plan.session.telemetry
     results: list[list[dict] | None] = [None] * len(futures)
     index = {f: i for i, f in enumerate(futures)}
+    done = 0
     try:
         for f in concurrent.futures.as_completed(futures):
             results[index[f]] = f.result()
+            done += 1
+            if tel.enabled:
+                # payloads not yet retired (per-unit payloads under the
+                # stealing scheduler, per-worker groups under static)
+                tel.gauge("scheduler.queue_depth", len(futures) - done)
     except BaseException:
         for f in futures:
             f.cancel()
@@ -339,18 +376,224 @@ def _drain_futures(plan: ExecutionPlan, payloads: list[dict],
     return results
 
 
+# ------------------------------------------------- work-stealing machinery
+
+
+def _steal_context(plan: ExecutionPlan, spec_dict: dict) -> dict:
+    """The per-WORKER context for the stealing scheduler, shipped once per
+    worker (pool initializer / thread init) instead of once per unit: the
+    serialized spec, the warm parent store path, the dataset arrays, and the
+    parent trace path (workers derive their own shard names from their
+    identity, so the parent need not know worker pids up front)."""
+    session = plan.session
+    dataset = session._get_dataset()
+    tel = session.telemetry
+    base_store_path = (
+        session._store_path
+        if session.spec.store is not None
+        and session._store_path is not None
+        and os.path.exists(session._store_path)
+        else None
+    )
+    return {
+        "spec": spec_dict,
+        "store_base": (
+            session._store_path
+            if session.spec.store is not None and session._store_path is not None
+            else None
+        ),
+        "base_store_path": base_store_path,
+        "dataset": (
+            None if dataset is None else (dataset.indices, dataset.values)
+        ),
+        "trace_path": getattr(tel, "path", None) if tel.enabled else None,
+    }
+
+
+def _build_worker_state(ctx: dict, ident: int) -> dict:
+    """One persistent worker session keyed by ``ident`` (pid for process
+    workers, device index for device threads): shard store
+    ``<base>.shard<ident>``, trace shard ``trace.shard<ident>.jsonl`` — both
+    names the parent's glob-based recovery already understands."""
+    from .api import TuningSession, TuningSpec  # lazy: avoid an import cycle
+    from .dataset import SampleDataset
+
+    spec = TuningSpec.from_dict(ctx["spec"])
+    telemetry = None
+    if ctx.get("trace_path"):
+        from ..telemetry.events import shard_file
+        from ..telemetry.tracer import Telemetry
+
+        telemetry = Telemetry(
+            shard_file(ctx["trace_path"], ident), src=f"shard{ident}"
+        )
+    store_path = (
+        None
+        if ctx.get("store_base") is None
+        else f"{ctx['store_base']}.shard{ident}"
+    )
+    session = TuningSession(spec, store_path=store_path, telemetry=telemetry)
+    base = ctx.get("base_store_path")
+    if base is not None and session.store is not None and os.path.exists(base):
+        # seed the shard store from the parent's warm store: hits are served
+        # without re-measuring (or recompiling, for the pallas backend)
+        absorb_store(session.store, spec.store, base)
+    if ctx.get("dataset") is not None:
+        indices, values = ctx["dataset"]
+        session._dataset = SampleDataset(
+            space=session.space, indices=indices, values=values
+        )
+    return {
+        "session": session,
+        "journal": session.unit_journal(),
+        "telemetry": telemetry,
+        "ident": int(ident),
+    }
+
+
+def _close_worker_state(state: dict | None) -> None:
+    """Flush a worker's shard store tail and its trace (counters + fh)."""
+    if state is None:
+        return
+    try:
+        state["session"].save_store()
+    finally:
+        if state["telemetry"] is not None:
+            state["telemetry"].close()
+
+
+def _run_state_unit(state: dict, unit_dict: dict) -> tuple[int, dict]:
+    """Run one pulled unit against a persistent worker state, journaling it
+    into the worker's shard store.  Returns ``(worker ident, result dict)``
+    so the parent can attribute completions (steal accounting)."""
+    session = state["session"]
+    result = session.run_unit(ExperimentUnit.from_dict(unit_dict))
+    if state["journal"] is not None:
+        state["journal"].put(result)   # throttled flush — a kill loses little
+    return state["ident"], result.to_dict()
+
+
+def _drain_steal(plan: ExecutionPlan, futures: list, n_workers: int) -> list[dict]:
+    """Collect per-unit futures as they complete, failing fast (the caller
+    owns pool shutdown + shard merge on both paths).
+
+    Steal accounting: worker identities are mapped to slots in first-seen
+    completion order; a completed unit whose worker slot differs from its
+    static round-robin owner (``unit_index % n_workers``) counts as one
+    ``scheduler.steals`` — an approximate but cheap measure of how much the
+    queue rebalanced versus the static partition.  ``scheduler.queue_depth``
+    gauges units not yet retired after each completion."""
+    import concurrent.futures
+
+    tel = plan.session.telemetry
+    n = len(futures)
+    results: list[dict | None] = [None] * n
+    index = {f: i for i, f in enumerate(futures)}
+    slot_of: dict[int, int] = {}
+    done = 0
+    for f in concurrent.futures.as_completed(futures):
+        ident, rd = f.result()        # re-raises the worker's exception
+        i = index[f]
+        results[i] = rd
+        done += 1
+        if tel.enabled:
+            slot = slot_of.setdefault(ident, len(slot_of))
+            tel.gauge("scheduler.queue_depth", n - done)
+            if slot != i % n_workers:
+                tel.inc("scheduler.steals")
+    return results
+
+
 # ------------------------------------------------------------------- process
 
+#: per-process worker state for the stealing scheduler (set by the pool
+#: initializer in each spawned worker; module-global because pool tasks
+#: can only receive picklable arguments)
+_STEAL_STATE: dict = {}
 
-def _run_process(plan: ExecutionPlan) -> list[UnitResult]:
+
+def _steal_init(ctx: dict) -> None:
+    """Pool initializer (runs once per spawned worker process): build the
+    persistent session keyed by pid and register its flush at process exit
+    — ``ProcessPoolExecutor.shutdown(wait=True)`` joins workers, so the
+    parent merges only after every shard store is saved."""
+    import atexit
+
+    state = _build_worker_state(ctx, ident=os.getpid())
+    _STEAL_STATE["state"] = state
+    atexit.register(_close_worker_state, state)
+
+
+def _steal_unit_task(unit_dict: dict) -> tuple[int, dict]:
+    return _run_state_unit(_STEAL_STATE["state"], unit_dict)
+
+
+def _merge_steal_shards(session) -> None:
+    """Fold worker shard stores and trace shards into the parent.  Worker
+    identities (pids / device indices) are not known to the parent up
+    front, so this is the same glob the kill-recovery path uses."""
+    recover_shard_stores(session)
+
+
+def _run_process_static(plan: ExecutionPlan) -> list[UnitResult]:
+    """The static schedule: one round-robin payload per worker, submitted to
+    a spawn pool and drained ``as_completed`` — same fail-fast semantics as
+    every other parallel path (the first worker exception absorbs completed
+    workers' shard stores and traces before re-raising)."""
+    import concurrent.futures
     import multiprocessing
 
     spec_dict = _check_shippable(plan.session)
     payloads = _make_payloads(plan, spec_dict)
-    ctx = multiprocessing.get_context("spawn")
-    with ctx.Pool(processes=len(payloads)) as pool:
-        worker_results = pool.map(_unit_worker, payloads)
+    pool = concurrent.futures.ProcessPoolExecutor(
+        max_workers=len(payloads),
+        mp_context=multiprocessing.get_context("spawn"),
+    )
+    try:
+        futures = [pool.submit(_unit_worker, p) for p in payloads]
+        worker_results = _drain_futures(plan, payloads, futures)
+    finally:
+        pool.shutdown()
     return _collect(plan, payloads, worker_results)
+
+
+def _run_process(plan: ExecutionPlan) -> list[UnitResult]:
+    """Spawn-process fan-out.  Stealing (default): persistent per-process
+    sessions pull units from the shared pool queue; static: the legacy
+    one-payload-per-worker partition."""
+    if plan.scheduler == "static":
+        return _run_process_static(plan)
+    import concurrent.futures
+    import multiprocessing
+
+    spec_dict = _check_shippable(plan.session)
+    ctx = _steal_context(plan, spec_dict)
+    n = max(1, min(plan.max_workers, len(plan.units)))
+    pool = concurrent.futures.ProcessPoolExecutor(
+        max_workers=n,
+        mp_context=multiprocessing.get_context("spawn"),
+        initializer=_steal_init,
+        initargs=(ctx,),
+    )
+    try:
+        futures = [
+            pool.submit(_steal_unit_task, u.to_dict()) for u in plan.units
+        ]
+        try:
+            dicts = _drain_steal(plan, futures, n)
+        except BaseException:
+            for f in futures:
+                f.cancel()
+            # join workers first (their exit handlers flush shard stores),
+            # THEN absorb what they completed — fail-fast parity with
+            # _drain_futures: journaled units survive into the parent
+            pool.shutdown(wait=True)
+            _merge_steal_shards(plan.session)
+            raise
+    finally:
+        pool.shutdown(wait=True)
+    _merge_steal_shards(plan.session)
+    return [UnitResult.from_dict(d) for d in dicts]
 
 
 register_executor(Executor(name="process", run=_run_process, parallel=True))
@@ -360,8 +603,15 @@ register_executor(Executor(name="process", run=_run_process, parallel=True))
 
 
 def _run_futures(plan: ExecutionPlan) -> list[UnitResult]:
+    """The generic ``concurrent.futures`` seam.  Under the stealing
+    scheduler each payload carries exactly one unit, so ANY pool — thread,
+    process, or remote adapter — drains the queue in completion order; under
+    ``static`` the legacy one-payload-per-worker grouping is submitted."""
     spec_dict = _check_shippable(plan.session)
-    payloads = _make_payloads(plan, spec_dict)
+    if plan.scheduler == "static":
+        payloads = _make_payloads(plan, spec_dict)
+    else:
+        payloads = _make_unit_payloads(plan, spec_dict)
     pool = plan.futures_pool
     owned = pool is None
     if owned:
@@ -369,7 +619,7 @@ def _run_futures(plan: ExecutionPlan) -> list[UnitResult]:
         import multiprocessing
 
         pool = concurrent.futures.ProcessPoolExecutor(
-            max_workers=len(payloads),
+            max_workers=max(1, min(plan.max_workers, len(payloads))),
             mp_context=multiprocessing.get_context("spawn"),
         )
     try:
@@ -422,17 +672,81 @@ def _run_device(plan: ExecutionPlan) -> list[UnitResult]:
             session=plan.session,
             units=plan.units,
             max_workers=len(devices),
+            futures_pool=plan.futures_pool,
+            scheduler=plan.scheduler,
         )
-    payloads = _make_payloads(plan, spec_dict)
-    with concurrent.futures.ThreadPoolExecutor(
-        max_workers=len(payloads), thread_name_prefix="device-shard"
-    ) as pool:
+    if plan.scheduler == "static":
+        payloads = _make_payloads(plan, spec_dict)
+        with concurrent.futures.ThreadPoolExecutor(
+            max_workers=len(payloads), thread_name_prefix="device-shard"
+        ) as pool:
+            futures = [
+                pool.submit(_device_worker, p, devices[k])
+                for k, p in enumerate(payloads)
+            ]
+            worker_results = _drain_futures(plan, payloads, futures)
+        return _collect(plan, payloads, worker_results)
+    return _run_device_steal(plan, spec_dict, devices)
+
+
+def _run_device_steal(
+    plan: ExecutionPlan, spec_dict: dict, devices: list
+) -> list[UnitResult]:
+    """Stealing schedule over device-pinned worker threads.  Each thread
+    builds ONE persistent session at thread start (compilation caches stay
+    warm across units) and pulls units from the pool queue as it frees up;
+    the worker identity is the device index, so shard stores and trace
+    shards use the same ``shard<k>`` names as the static path."""
+    import concurrent.futures
+    import threading
+
+    import jax
+
+    ctx = _steal_context(plan, spec_dict)
+    n = max(1, min(plan.max_workers, len(plan.units)))
+    states: list[dict | None] = []
+    states_lock = threading.Lock()
+    tls = threading.local()
+
+    def _thread_init() -> None:
+        with states_lock:
+            k = len(states)
+            states.append(None)
+        state = _build_worker_state(ctx, ident=k)
+        state["device"] = devices[k]
+        states[k] = state
+        tls.state = state
+
+    def _thread_task(unit_dict: dict) -> tuple[int, dict]:
+        state = tls.state
+        with jax.default_device(state["device"]):
+            return _run_state_unit(state, unit_dict)
+
+    pool = concurrent.futures.ThreadPoolExecutor(
+        max_workers=n,
+        thread_name_prefix="device-steal",
+        initializer=_thread_init,
+    )
+    try:
         futures = [
-            pool.submit(_device_worker, p, devices[k])
-            for k, p in enumerate(payloads)
+            pool.submit(_thread_task, u.to_dict()) for u in plan.units
         ]
-        worker_results = _drain_futures(plan, payloads, futures)
-    return _collect(plan, payloads, worker_results)
+        try:
+            dicts = _drain_steal(plan, futures, n)
+        except BaseException:
+            for f in futures:
+                f.cancel()
+            pool.shutdown(wait=True)
+            for s in states:
+                _close_worker_state(s)
+            _merge_steal_shards(plan.session)
+            raise
+    finally:
+        pool.shutdown(wait=True)
+    for s in states:
+        _close_worker_state(s)
+    _merge_steal_shards(plan.session)
+    return [UnitResult.from_dict(d) for d in dicts]
 
 
 register_executor(Executor(name="device", run=_run_device, parallel=True))

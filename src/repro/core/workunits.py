@@ -185,6 +185,7 @@ def build_units(
     *,
     min_units: int = 1,
     max_unit_experiments: int | None = None,
+    cost=None,
 ) -> list[ExperimentUnit]:
     """Decompose ``(algo, sample_size, n_experiments)`` cells into units.
 
@@ -192,13 +193,26 @@ def build_units(
     today's per-cell loop); if ``max_unit_experiments`` is set, chunk every
     cell to at most that many experiments per unit (checkpoint granularity
     for big-E rows); then, while there are fewer than ``min_units`` units,
-    split the largest splittable unit at its midpoint (first-in-order on
-    ties), so a request for N workers produces at least N units whenever the
-    matrix holds that many experiments — including a single-cell matrix.
+    split the most expensive splittable unit at its experiment midpoint
+    (first-in-order on ties), so a request for N workers produces at least N
+    units whenever the matrix holds that many experiments — including a
+    single-cell matrix.
+
+    ``cost`` is the unit-duration predictor driving that split order — a
+    pure function ``ExperimentUnit -> float`` (e.g. samples x the cost
+    model's mean per-sample runtime, see
+    :func:`repro.costmodel.mean_runtime_estimate`).  It must be
+    deterministic in the unit alone: the decomposition is part of the
+    journaled plan, and two runs of the same spec must split identically.
+    Without one, a unit's experiment count is its cost — the widest unit
+    splits first.
 
     The returned order is canonical: cells in their given order, units by
     ascending ``exp_lo`` within each cell.
     """
+    if cost is None:
+        def cost(u):
+            return u.n_unit_exp
     units: list[ExperimentUnit] = []
     for algo, s, e in cells:
         if e < 1:
@@ -215,14 +229,19 @@ def build_units(
                 )
             )
     while len(units) < min_units:
-        widths = [u.n_unit_exp for u in units]
-        widest = max(widths)
-        if widest <= 1:
+        best_i = -1
+        best_cost = float("-inf")
+        for i, u in enumerate(units):
+            if u.n_unit_exp <= 1:
+                continue  # single-experiment units cannot split further
+            c = float(cost(u))
+            if c > best_cost:
+                best_i, best_cost = i, c
+        if best_i < 0:
             break
-        i = widths.index(widest)
-        u = units[i]
+        u = units[best_i]
         mid = u.exp_lo + u.n_unit_exp // 2
-        units[i : i + 1] = [
+        units[best_i : best_i + 1] = [
             ExperimentUnit(u.algo, u.sample_size, u.exp_lo, mid, u.n_exp),
             ExperimentUnit(u.algo, u.sample_size, mid, u.exp_hi, u.n_exp),
         ]

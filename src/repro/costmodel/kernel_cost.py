@@ -276,6 +276,34 @@ def true_optimum(w: KernelWorkload, chip: ChipModel) -> tuple[Config, float]:
     return cfg, float(times[j])
 
 
+def mean_runtime_estimate(
+    w: KernelWorkload, chip: ChipModel, n_probe: int = 256, seed: int = 0
+) -> float:
+    """Deterministic mean modelled runtime over a pseudo-random probe of the
+    full 6-parameter grid — the per-sample duration scale the work-unit
+    scheduler uses to predict unit costs before anything has run.
+
+    A seeded generator over a fixed probe size makes the estimate a pure
+    function of ``(workload, chip, n_probe, seed)``: two processes planning
+    the same matrix predict identical unit costs and therefore build
+    identical unit decompositions.  Invalid geometries contribute their
+    ``FAILURE_RUNTIME`` penalty, exactly as a random searcher pays it.
+    """
+    rng = np.random.default_rng(seed)
+    probe = np.stack(
+        [
+            rng.integers(1, 17, size=n_probe),   # t_x
+            rng.integers(1, 17, size=n_probe),   # t_y
+            rng.integers(1, 17, size=n_probe),   # t_z
+            rng.integers(1, 9, size=n_probe),    # w_x
+            rng.integers(1, 9, size=n_probe),    # w_y
+            rng.integers(1, 9, size=n_probe),    # w_z
+        ],
+        axis=1,
+    )
+    return float(np.mean(runtime_model_batch(w, chip, probe)))
+
+
 def runtime_model_batch(
     w: KernelWorkload, chip: ChipModel, params: np.ndarray
 ) -> np.ndarray:

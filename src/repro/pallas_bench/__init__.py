@@ -19,6 +19,7 @@ See docs/pallas_backend.md for the timing protocol and cache keying.
 """
 
 from ..core.space import Param, SearchSpace
+from .compile_cache import CompileCache
 from .measure import PallasMeasurement
 from .validity import (
     DEFAULT_MAX_GRID,
@@ -31,6 +32,7 @@ from .validity import (
 from .workloads import DEFAULT_X, DEFAULT_Y, PallasWorkload, make_workload
 
 __all__ = [
+    "CompileCache",
     "DEFAULT_MAX_GRID",
     "DEFAULT_VMEM_LIMIT",
     "DEFAULT_X",

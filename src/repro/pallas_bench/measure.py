@@ -51,6 +51,7 @@ from ..core.clock import monotonic
 from ..core.engine import config_key
 from ..core.measurement import BaseMeasurement, StageClock, fence
 from ..kernels.common import Config, geometry_from_config
+from .compile_cache import CompileCache, deserialize_compiled, serialize_compiled
 from .validity import (
     DEFAULT_MAX_GRID,
     DEFAULT_VMEM_LIMIT,
@@ -73,6 +74,14 @@ class PallasMeasurement(BaseMeasurement):
     injectable so tests can prove pipeline on/off equivalence on
     deterministic timestamps.  ``seed`` is accepted for backend-factory
     uniformity; wall-clock timing has no noise stream to seed.
+
+    ``compile_cache`` layers the persistent cross-process compile cache
+    (:class:`~repro.pallas_bench.compile_cache.CompileCache`, or a cache
+    directory path) under the in-memory one: compiled executables are
+    served across measurement instances, worker processes, and runs, and
+    in-flight compiles dedup across process boundaries.  A pure speed knob —
+    ``n_compiles`` drops (to zero against a fully warm cache), values do
+    not change.
     """
 
     def __init__(
@@ -86,6 +95,7 @@ class PallasMeasurement(BaseMeasurement):
         validate: bool = True,
         pipeline_workers: int = 0,
         timer: Callable[[], float] | None = None,
+        compile_cache: "CompileCache | str | None" = None,
     ):
         super().__init__()
         if repeats < 1:
@@ -105,12 +115,19 @@ class PallasMeasurement(BaseMeasurement):
         #: per-stage wall-clock (screen / compile / time), per run — reset()
         #: zeroes it together with the per-run counters below
         self.clock = StageClock()
+        if isinstance(compile_cache, str):
+            compile_cache = CompileCache(compile_cache)
+        #: persistent cross-process compile cache, or None (memory-only)
+        self.pcache: CompileCache | None = compile_cache
         #: lifetime compile count == compilation-cache fills (the cache
         #: survives reset() by design, and so does this)
         self.n_compiles = 0
+        #: lifetime persistent-cache hits (entries served instead of compiled)
+        self.n_pcache_hits = 0
         #: per-run counters — what provenance reports, so a later matrix
         #: cell reusing this instance never over-reports earlier cells' work
         self.run_compiles = 0
+        self.run_pcache_hits = 0
         self._run_invalid: set[str] = set()
         #: config_key -> InvalidMeasurement for every penalized config served
         #: (lifetime, like the compile cache: reasons stay addressable)
@@ -141,37 +158,168 @@ class PallasMeasurement(BaseMeasurement):
             return cfg
         return {**cfg, "w_z": 1}
 
+    def _pcache_key(self, gkey: tuple) -> str:
+        w = self.workload
+        return self.pcache.key(
+            kernel=w.name,
+            x=w.x,
+            y=w.y,
+            input_seed=w.input_seed,
+            interpret=bool(w.interpret()),
+            geometry=list(gkey),
+        )
+
+    def _pcache_hit(self) -> None:
+        with self._cache_lock:
+            self.n_pcache_hits += 1
+            self.run_pcache_hits += 1
+        if self.telemetry.enabled:
+            self.telemetry.inc("pcache.hits")
+
+    def _pcache_serve(
+        self, entry: dict, gkey: tuple, inputs: tuple
+    ) -> Callable | InvalidMeasurement | None:
+        """Turn a persistent-cache entry into a warmed callable (or cached
+        penalty); ``None`` means the entry cannot substitute for a compile
+        here (no artifact, or the artifact fails to load) and the caller
+        compiles locally."""
+        if entry.get("status") == "invalid":
+            bad = InvalidMeasurement(
+                reason=entry.get("reason") or "cached compile failure",
+                stage=entry.get("stage") or "compile",
+            )
+            with self._cache_lock:
+                self._compiled[gkey] = bad
+            self._pcache_hit()
+            return bad
+        blob = entry.get("artifact")
+        if blob is None:
+            return None
+        try:
+            loaded = deserialize_compiled(blob)
+
+            def fn():
+                return loaded(*inputs)
+
+            for _ in range(max(1, self.warmup)):
+                fence(fn())
+        except Exception:  # noqa: BLE001 — a bad artifact degrades to a recompile
+            return None
+        with self._cache_lock:
+            self._compiled[gkey] = fn
+        self._pcache_hit()
+        return fn
+
+    def _compile_aot(self, inputs: tuple, run_cfg: Config):
+        """AOT-compile the program (``jit(...).lower().compile()``) so its
+        executable can be published to the persistent cache.  Returns
+        ``(warmed callable, serialized blob | None)``, or ``(None, None)``
+        when AOT lowering fails — the jit-closure fallback then owns the
+        compile (and the penalty, if the config is genuinely invalid)."""
+        import jax
+
+        try:
+            compiled = (
+                jax.jit(lambda *arrays: self.workload.run(arrays, run_cfg))
+                .lower(*inputs)
+                .compile()
+            )
+
+            def fn():
+                return compiled(*inputs)
+
+            fence(fn())                   # first run (compile() is lazy-free)
+            for _ in range(max(0, self.warmup - 1)):
+                fence(fn())
+        except Exception:  # noqa: BLE001 — fall back to the closure path
+            return None, None
+        return fn, serialize_compiled(compiled)
+
     def _compile_now(self, cfg: Config, gkey: tuple) -> Callable | InvalidMeasurement:
         """Trace + lower + warm cfg's geometry, populating the cache.  Called
         from the main thread (inline path) or a prefetch pool thread; all
-        shared state mutates under the cache lock."""
+        shared state mutates under the cache lock.
+
+        With a persistent cache attached, the order is: serve the on-disk
+        entry (no compile counted) -> claim the key and compile -> or, when
+        another process holds the claim, wait for its entry.  Claim holders
+        publish ok/invalid entries so every other process — including ones
+        started later — skips this geometry entirely."""
         with self._cache_lock:
             if self._inputs is None:
                 self._inputs = self.workload.materialize()
             inputs = self._inputs
-            self.n_compiles += 1
-            self.run_compiles += 1
-        if self.telemetry.enabled:
-            self.telemetry.inc("compiles")
         run_cfg = self._run_config(cfg)
-
-        def fn():
-            return self.workload.run(inputs, run_cfg)
-
+        pc = self.pcache
+        pckey = None
+        claimed = False
+        if pc is not None:
+            pckey = self._pcache_key(gkey)
+            entry = pc.get(pckey)
+            if entry is None:
+                claimed = pc.claim(pckey)
+                if claimed:
+                    # double-check under the claim: the previous holder may
+                    # have published between our miss and our claim (entries
+                    # land before claims are released), so this read is
+                    # authoritative — each geometry compiles exactly once
+                    # across processes
+                    entry = pc.get(pckey)
+                else:
+                    # another process is compiling this geometry right now;
+                    # waiting is the cross-process analogue of the prefetch
+                    # future join
+                    if self.telemetry.enabled:
+                        self.telemetry.inc("pcache.waits")
+                    entry = pc.wait(pckey)
+            if entry is not None:
+                got = self._pcache_serve(entry, gkey, inputs)
+                if got is not None:
+                    if claimed:
+                        pc.release(pckey)
+                    return got
+            if self.telemetry.enabled:
+                self.telemetry.inc("pcache.misses")
         try:
-            fence(fn())                       # trace + lower + first run
-            for _ in range(max(0, self.warmup - 1)):
-                fence(fn())
-        except Exception as e:  # noqa: BLE001 — any compile failure is a penalty
-            bad = InvalidMeasurement(
-                reason=f"{type(e).__name__}: {e}", stage="compile"
-            )
             with self._cache_lock:
-                self._compiled[gkey] = bad
-            return bad
-        with self._cache_lock:
-            self._compiled[gkey] = fn
-        return fn
+                self.n_compiles += 1
+                self.run_compiles += 1
+            if self.telemetry.enabled:
+                self.telemetry.inc("compiles")
+            fn = None
+            artifact = None
+            if pc is not None:
+                fn, artifact = self._compile_aot(inputs, run_cfg)
+            if fn is None:
+                def fn():
+                    return self.workload.run(inputs, run_cfg)
+
+                try:
+                    fence(fn())                   # trace + lower + first run
+                    for _ in range(max(0, self.warmup - 1)):
+                        fence(fn())
+                except Exception as e:  # noqa: BLE001 — any compile failure is a penalty
+                    bad = InvalidMeasurement(
+                        reason=f"{type(e).__name__}: {e}", stage="compile"
+                    )
+                    with self._cache_lock:
+                        self._compiled[gkey] = bad
+                    if claimed:
+                        pc.put(
+                            pckey, status="invalid",
+                            reason=bad.reason, stage="compile",
+                        )
+                    return bad
+            with self._cache_lock:
+                self._compiled[gkey] = fn
+            if claimed:
+                pc.put(pckey, status="ok", artifact=artifact)
+                if self.telemetry.enabled:
+                    self.telemetry.inc("pcache.stores")
+            return fn
+        finally:
+            if claimed:
+                pc.release(pckey)
 
     # -- pipeline stages -------------------------------------------------------
     @contextmanager
@@ -384,9 +532,11 @@ class PallasMeasurement(BaseMeasurement):
             "warmup": self.warmup,
             "timer": "perf_counter",
             "pipeline_workers": self.pipeline_workers,
+            "compile_cache": self.pcache is not None,
             "stage_s": stage_s,
             "n_compiles": self.run_compiles,
             "n_compiles_total": self.n_compiles,
+            "n_pcache_hits": self.run_pcache_hits,
             "n_invalid": len(self._run_invalid),
         }
 
@@ -396,6 +546,7 @@ class PallasMeasurement(BaseMeasurement):
         programs are still valid — that is the point of the cache)."""
         super().reset()
         self.run_compiles = 0
+        self.run_pcache_hits = 0
         self._run_invalid.clear()
         self.repeat_log.clear()
         self.final_repeat_log.clear()

@@ -2,7 +2,8 @@
 
 The executor layer's core promise is that *how fast* a run executes never
 changes *what* it computes: ``pipeline_workers``, ``max_workers``,
-``executor``, ``futures_pool`` may change wall-clock only.  The promise is
+``executor``, ``futures_pool``, ``scheduler``, ``compile_cache`` may change
+wall-clock only.  The promise is
 load-bearing in three sink functions — ``default_cache_key`` (the shared
 measurement-store namespace), ``journal_namespace`` (resume validity), and
 ``_spec_fingerprint`` (the analysis layer's run identity).  If a knob leaks
@@ -32,7 +33,14 @@ from dataclasses import dataclass, field
 
 from .findings import Finding
 
-SPEED_KNOBS = ("pipeline_workers", "max_workers", "executor", "futures_pool")
+SPEED_KNOBS = (
+    "pipeline_workers",
+    "max_workers",
+    "executor",
+    "futures_pool",
+    "scheduler",
+    "compile_cache",
+)
 
 SINK_NAMES = ("default_cache_key", "journal_namespace", "_spec_fingerprint")
 

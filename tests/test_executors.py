@@ -189,7 +189,9 @@ def test_unit_experiments_cap_is_bit_identical():
 
 def test_futures_pool_alone_implies_parallel_executor():
     """Passing a pool IS the parallelism request: no max_workers/executor
-    needed, and the pool must actually be used (not silently degraded)."""
+    needed, and the pool must actually be used (not silently degraded).
+    Under the default stealing scheduler every unit is its own submission;
+    under static there is exactly one payload per worker."""
     class CountingPool(ThreadPoolExecutor):
         submits = 0
 
@@ -199,7 +201,14 @@ def test_futures_pool_alone_implies_parallel_executor():
 
     spec = SPEC.replace(algorithms=("rs", "ga"), dataset_size=None)
     base = repro.tune_matrix(spec)
-    res = repro.tune_matrix(spec, futures_pool=CountingPool(max_workers=2))
+    session = TuningSession(spec)
+    res = session.run_matrix(futures_pool=CountingPool(max_workers=2))
+    assert CountingPool.submits == len(session.last_unit_plan) >= 2
+    assert_same_cells(base, res)
+    CountingPool.submits = 0
+    res = repro.tune_matrix(
+        spec, futures_pool=CountingPool(max_workers=2), scheduler="static"
+    )
     assert CountingPool.submits == 2
     assert_same_cells(base, res)
     with pytest.raises(ValueError, match="futures_pool"):
@@ -354,6 +363,134 @@ def test_resume_recovers_killed_workers_shard_stores(tmp_path, monkeypatch):
     res = resumed.run_matrix(resume=True)
     assert ran == []                            # everything recovered
     assert not os.path.exists(str(tmp_path / "c.json.shard0"))
+    assert_same_cells(ghost_res, res)
+
+
+# ----------------------------------------------------- stealing scheduler
+
+
+def test_steal_static_and_device_schedulers_bit_identical(tmp_path):
+    """serial ≡ process(steal) ≡ process(static) ≡ device(steal) ≡
+    futures(steal): identical cells and byte-identical store values, no
+    leftover shard stores — the scheduler is pure wall-clock."""
+    spec = SPEC.replace(algorithms=("rs", "ga"), dataset_size=None)
+    runs = {
+        "serial": dict(),
+        "steal": dict(executor="process", max_workers=2, scheduler="steal"),
+        "static": dict(executor="process", max_workers=2, scheduler="static"),
+        "futures": dict(
+            executor="futures", max_workers=2,
+            futures_pool=ThreadPoolExecutor(max_workers=2),
+        ),
+    }
+    results, bytes_ = {}, {}
+    for name, kwargs in runs.items():
+        path = str(tmp_path / f"{name}.json")
+        session = TuningSession(spec.replace(store="json", store_path=path))
+        results[name] = session.run_matrix(**kwargs)
+        bytes_[name] = store_values_bytes(path)
+    path = str(tmp_path / "device.json")
+    session = TuningSession(spec.replace(store="json", store_path=path))
+    with pytest.warns(UserWarning):          # single-device host: capped
+        results["device"] = session.run_matrix(executor="device", max_workers=2)
+    bytes_["device"] = store_values_bytes(path)
+    for name in ("steal", "static", "futures", "device"):
+        assert_same_cells(results["serial"], results[name])
+        assert bytes_[name] == bytes_["serial"]
+    assert not [f for f in os.listdir(tmp_path) if ".shard" in f]
+
+
+def test_steal_run_emits_scheduler_telemetry(tmp_path):
+    from repro.telemetry import for_run_dir, read_run
+
+    run_dir = str(tmp_path / "run")
+    tel = for_run_dir(run_dir)
+    spec = SPEC.replace(
+        algorithms=("rs", "ga"), dataset_size=None,
+        store="json", store_path=str(tmp_path / "c.json"),
+    )
+    session = TuningSession(spec, telemetry=tel)
+    session.run_matrix(executor="process", max_workers=2)
+    tel.close()
+    events = read_run(run_dir)
+    plan = [e for e in events if e["ev"] == "plan"][0]
+    assert plan["scheduler"] == "steal"
+    # the queue drains one gauge tick per retired unit, ending at zero
+    depths = [
+        e["value"] for e in events
+        if e["ev"] == "gauge" and e["gauge"] == "scheduler.queue_depth"
+    ]
+    assert len(depths) == len(session.last_unit_plan)
+    assert sorted(depths, reverse=True) == depths and depths[-1] == 0
+    # steals may legitimately be zero on a fast matrix; the counter must
+    # simply never exceed what could have been rebalanced
+    totals = [e for e in events if e["ev"] == "totals"][-1]["counters"]
+    assert 0 <= totals.get("scheduler.steals", 0) <= len(depths)
+    assert totals["units_completed"] == len(session.last_unit_plan)
+
+
+def test_static_scheduler_plan_event_and_rejects_unknown(tmp_path):
+    from repro.telemetry import for_run_dir, read_run
+
+    run_dir = str(tmp_path / "run")
+    tel = for_run_dir(run_dir)
+    spec = SPEC.replace(algorithms=("rs", "ga"), dataset_size=None)
+    TuningSession(spec, telemetry=tel).run_matrix(
+        executor="process", max_workers=2, scheduler="static"
+    )
+    tel.close()
+    plan = [e for e in read_run(run_dir) if e["ev"] == "plan"][0]
+    assert plan["scheduler"] == "static"
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        TuningSession(spec).run_matrix(scheduler="warp")
+
+
+def test_process_steal_parent_failure_still_merges_shards(tmp_path, monkeypatch):
+    """Fail-fast parity for the stealing path: when the parent's drain dies,
+    completed workers' shard stores are absorbed before the error surfaces,
+    so a resume re-executes nothing that finished."""
+    import concurrent.futures as cf
+
+    import repro.core.executors as ex
+
+    spec = SPEC.replace(
+        algorithms=("rs", "ga"), dataset_size=None,
+        store="json", store_path=str(tmp_path / "c.json"),
+    )
+    clean = repro.tune_matrix(spec.replace(store=None, store_path=None))
+
+    def dying_drain(plan, futures, n_workers):
+        cf.wait(list(futures))               # let every unit finish first
+        raise RuntimeError("parent died mid-drain")
+
+    monkeypatch.setattr(ex, "_drain_steal", dying_drain)
+    with pytest.raises(RuntimeError, match="parent died mid-drain"):
+        TuningSession(spec).run_matrix(executor="process", max_workers=2)
+    monkeypatch.undo()
+    assert not [f for f in os.listdir(tmp_path) if ".shard" in f]
+
+    ran = spy_run_unit(monkeypatch)
+    res = TuningSession(spec).run_matrix(resume=True)
+    assert ran == []                         # every unit came from the journal
+    assert_same_cells(clean, res)
+
+
+def test_resume_recovers_pid_shaped_steal_shards(tmp_path, monkeypatch):
+    """Steal workers name shards by pid, not slot index — recovery globs, so
+    a leftover ``*.shard31337`` from a killed stealing run is absorbed the
+    same as the legacy ``*.shard0``."""
+    spec = SPEC.replace(
+        algorithms=("rs", "ga"),
+        store="json", store_path=str(tmp_path / "c.json"),
+    )
+    ghost = TuningSession(spec.replace(store_path=str(tmp_path / "ghost.json")))
+    ghost_res = ghost.run_matrix()
+    shutil.move(str(tmp_path / "ghost.json"), str(tmp_path / "c.json.shard31337"))
+
+    ran = spy_run_unit(monkeypatch)
+    res = TuningSession(spec).run_matrix(resume=True)
+    assert ran == []
+    assert not os.path.exists(str(tmp_path / "c.json.shard31337"))
     assert_same_cells(ghost_res, res)
 
 

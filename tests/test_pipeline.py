@@ -25,6 +25,7 @@ from repro.core import (
     TuningSpec,
     build_units,
 )
+from repro.core.api import STEAL_OVERSPLIT
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -246,12 +247,23 @@ def arm_failing_unit(monkeypatch, bad_key: str):
     return ran, armed
 
 
+def planned_units(spec, workers):
+    """The decomposition a parallel run_matrix will build under the default
+    stealing scheduler (cost-weighted oversplit)."""
+    session = TuningSession(spec)
+    return build_units(
+        session.cells(),
+        min_units=workers * STEAL_OVERSPLIT,
+        cost=session._unit_cost(),
+    )
+
+
 def test_futures_failure_reraises_and_journals_completed(tmp_path, monkeypatch):
     """One failing worker no longer hides behind submission-order waits: the
     exception surfaces, and the healthy workers' journaled units are merged
     into the parent store so a resume re-runs only what actually failed."""
     spec = SPEC.replace(store="json", store_path=str(tmp_path / "c.json"))
-    units = build_units(TuningSession(spec).cells())
+    units = planned_units(spec, 2)
     bad = units[-1].key
     ran, armed = arm_failing_unit(monkeypatch, bad)
 
@@ -265,7 +277,14 @@ def test_futures_failure_reraises_and_journals_completed(tmp_path, monkeypatch):
 
     armed["on"] = False
     ran.clear()
-    res = TuningSession(spec).run_matrix(resume=True)
+    # resume with the same worker count so the decomposition matches the
+    # journaled fragments exactly; with one pending unit the parallel
+    # request degrades (with a warning) to serial
+    with pytest.warns(UserWarning, match="degrades to serial"):
+        res = TuningSession(spec).run_matrix(
+            resume=True, executor="futures", max_workers=2,
+            futures_pool=ThreadPoolExecutor(max_workers=2),
+        )
     assert set(ran) == {bad}            # completed units served from journal
     assert not (done_before & set(ran))
     clean = repro.tune_matrix(SPEC)
@@ -280,7 +299,7 @@ def test_device_executor_failure_then_resume(tmp_path, monkeypatch):
     failure mid-run leaves the completed units journaled in the (merged)
     shard stores; the resumed device run re-executes only the failure."""
     spec = SPEC.replace(store="json", store_path=str(tmp_path / "c.json"))
-    units = build_units(TuningSession(spec).cells())
+    units = planned_units(spec, 2)
     bad = units[-1].key
     ran, armed = arm_failing_unit(monkeypatch, bad)
 
@@ -289,7 +308,7 @@ def test_device_executor_failure_then_resume(tmp_path, monkeypatch):
             TuningSession(spec).run_matrix(executor="device", max_workers=2)
     armed["on"] = False
     ran.clear()
-    with pytest.warns(UserWarning):
+    with pytest.warns(UserWarning):       # 1 pending unit: degrades to serial
         res = TuningSession(spec).run_matrix(
             resume=True, executor="device", max_workers=2
         )

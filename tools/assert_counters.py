@@ -1,0 +1,88 @@
+"""Assert counter totals (and plan fields) in a run dir's telemetry trace.
+
+`make smoke-matrix` uses this to turn the trace into a gate: the warm
+persistent-compile-cache pass must report ``compiles==0``, and the stealing
+pass must have planned under ``scheduler=steal``.  Assertions are simple
+comparisons against the FINAL ``totals`` event's counters, with missing
+keys reading as 0:
+
+    python tools/assert_counters.py RUN_DIR "compiles==0" "pcache.hits>0" \\
+        --plan scheduler=steal
+
+Exits nonzero (listing every failed assertion) when the trace disagrees.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+_ASSERT = re.compile(r"^([\w.]+)\s*(==|!=|>=|<=|>|<)\s*(-?\d+)$")
+
+_OPS = {
+    "==": lambda a, b: a == b,
+    "!=": lambda a, b: a != b,
+    ">=": lambda a, b: a >= b,
+    "<=": lambda a, b: a <= b,
+    ">": lambda a, b: a > b,
+    "<": lambda a, b: a < b,
+}
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("run_dir", help="results dir holding the merged trace")
+    ap.add_argument("asserts", nargs="*", metavar="KEY OP N",
+                    help="counter assertions, e.g. 'compiles==0'")
+    ap.add_argument("--plan", action="append", default=[],
+                    metavar="FIELD=VALUE",
+                    help="assert a field of the (first) plan event, e.g. "
+                         "scheduler=steal")
+    args = ap.parse_args(argv)
+
+    from repro.telemetry import read_run
+
+    events = read_run(args.run_dir)
+    if not events:
+        print(f"[assert_counters] no trace events under {args.run_dir}")
+        return 1
+    totals = [e for e in events if e.get("ev") == "totals"]
+    counters = totals[-1].get("counters", {}) if totals else {}
+    plans = [e for e in events if e.get("ev") == "plan"]
+
+    failed: list[str] = []
+    for spec in args.asserts:
+        m = _ASSERT.match(spec)
+        if m is None:
+            failed.append(f"unparseable assertion {spec!r}")
+            continue
+        key, op, want = m.group(1), m.group(2), int(m.group(3))
+        got = int(counters.get(key, 0))
+        if not _OPS[op](got, want):
+            failed.append(f"{key}={got} violates {spec!r}")
+    for spec in args.plan:
+        field, _, want = spec.partition("=")
+        if not plans:
+            failed.append(f"no plan event (wanted {spec!r})")
+        elif str(plans[0].get(field)) != want:
+            failed.append(
+                f"plan.{field}={plans[0].get(field)!r} violates {spec!r}"
+            )
+
+    if failed:
+        for f in failed:
+            print(f"[assert_counters] FAIL: {f}")
+        print(f"[assert_counters] counters were: {counters}")
+        return 1
+    checked = ", ".join(args.asserts + [f"plan:{p}" for p in args.plan])
+    print(f"[assert_counters] ok: {checked}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
