@@ -3,7 +3,7 @@
 # themselves when absent).
 PYTHON ?= python
 
-.PHONY: test test-fast bench lint staticcheck install-dev smoke-pallas smoke-matrix smoke-device docs-check report
+.PHONY: test test-fast bench lint staticcheck install-dev smoke-pallas smoke-matrix smoke-device smoke-serve docs-check report
 
 test:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q
@@ -84,6 +84,43 @@ smoke-device:
 	  results/smoke_device/serial/add_v5e_cache.json \
 	  results/smoke_device/device/add_v5e_cache.json
 	test -f results/smoke_device/device/REPORT.md
+
+# tier-2: tuning-as-a-service end to end (docs/serving.md) — a small matrix
+# populates a serve dir's winners index (--serve-dir), a cold exact-geometry
+# query must hit in under 10ms, then the full miss -> enqueue -> fleet
+# worker -> collect -> hit loop runs against the same dir; the collected
+# store must be byte-identical to a serial replay of the job, and the serve
+# dir's trace (CI artifact) must carry the serve.* / fleet.* counters
+smoke-serve:
+	rm -rf results/smoke_serve results/smoke_serve_matrix
+	PYTHONPATH=src $(PYTHON) -m benchmarks.paper_matrix --design scaled --budget 100 \
+	  --bench add --chip v5e --algos rs,ga --out results/smoke_serve_matrix \
+	  --serve-dir results/smoke_serve
+	PYTHONPATH=src $(PYTHON) -m repro.serving query --dir results/smoke_serve \
+	  --kernel add --x 8192 --y 8192 --device v5e --expect hit --max-ms 10 \
+	  --telemetry
+	PYTHONPATH=src $(PYTHON) -m repro.serving query --dir results/smoke_serve \
+	  --kernel add --x 4096 --y 4096 --device v5e --expect nearest --telemetry
+	PYTHONPATH=src $(PYTHON) -m repro.serving query --dir results/smoke_serve \
+	  --kernel harris --x 8192 --y 8192 --device v5e --enqueue --expect miss \
+	  --telemetry
+	PYTHONPATH=src $(PYTHON) -m repro.serving worker --dir results/smoke_serve \
+	  --max-jobs 1 --telemetry
+	PYTHONPATH=src $(PYTHON) -m repro.serving collect --dir results/smoke_serve \
+	  --telemetry
+	PYTHONPATH=src $(PYTHON) -m repro.serving query --dir results/smoke_serve \
+	  --kernel harris --x 8192 --y 8192 --device v5e --expect hit --max-ms 10 \
+	  --telemetry
+	PYTHONPATH=src $(PYTHON) -m repro.serving replay --dir results/smoke_serve \
+	  --job $$(PYTHONPATH=src $(PYTHON) -m repro.serving jobs \
+	    --dir results/smoke_serve | \
+	    $(PYTHON) -c 'import json,sys; print(json.loads(sys.stdin.readline())["id"])') \
+	  --out results/smoke_serve/serial.json
+	$(PYTHON) tools/compare_stores.py results/smoke_serve/store.sqlite \
+	  results/smoke_serve/serial.json
+	$(PYTHON) tools/assert_counters.py results/smoke_serve \
+	  "serve.hits>0" "serve.misses>0" "serve.enqueued>0" \
+	  "fleet.units_run>0" "fleet.jobs_completed>0" "fleet.jobs_collected>0"
 
 # render REPORT.md from any results directory: make report DIR=results/matrix_100
 report:

@@ -145,6 +145,41 @@ def run_combo(bench: str, chip_name: str, design: ExperimentDesign, out_dir: str
           f"({detail})")
 
 
+def index_matrix_winners(out_dir: str, serve_dir: str, *, benches, chips,
+                         design: ExperimentDesign, store: str = "json",
+                         backend: str = "costmodel", algorithms=ALGOS) -> int:
+    """Fold every finished combo's measurement store into ``serve_dir``'s
+    serving store (``serve_dir/store.sqlite``): one winners-index record per
+    (kernel, geometry, chip).  Equivalent to ``python -m repro.serving index
+    --dir serve_dir <combo stores>`` but driven off the matrix's own specs,
+    so it never picks up foreign store files sitting in ``out_dir``."""
+    from repro.core.stores import make_store
+    from repro.serving import index_winners, open_serve_store
+
+    os.makedirs(serve_dir, exist_ok=True)
+    dst, _kind = open_serve_store(os.path.join(serve_dir, "store.sqlite"))
+    total = 0
+    try:
+        for bench in benches:
+            for chip_name in chips:
+                spec = combo_spec(bench, chip_name, design, out_dir,
+                                  algorithms=algorithms, store=store,
+                                  backend=backend)
+                if spec.store_path is None or not os.path.exists(spec.store_path):
+                    continue
+                src = make_store(spec.store, spec.store_path)
+                try:
+                    total += index_winners(dst, src, save=False)
+                finally:
+                    if hasattr(src, "close"):
+                        src.close()
+        dst.save()
+    finally:
+        if hasattr(dst, "close"):
+            dst.close()
+    return total
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--design", choices=("paper", "scaled", "smoke"),
@@ -212,6 +247,12 @@ def main() -> None:
                     help="after the run, render REPORT.md (tables + figures "
                          "+ claim verdicts) into the results dir via "
                          "repro.analysis")
+    ap.add_argument("--serve-dir", default=None, metavar="DIR",
+                    help="after each combo, fold its store's per-geometry "
+                         "winners into DIR's serving store (DIR/store.sqlite "
+                         "— see `python -m repro.serving query`), so the "
+                         "matrix doubles as the tuning-as-a-service "
+                         "population step")
     ap.add_argument("--out", default=None)
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
@@ -255,6 +296,12 @@ def main() -> None:
                       ),
                       progress=args.progress)
     print(f"[matrix] all combos done in {(time.time()-t0)/60:.1f} min -> {out_dir}")
+    if args.serve_dir is not None:
+        n = index_matrix_winners(out_dir, args.serve_dir, benches=benches,
+                                 chips=chips, design=design, store=args.store,
+                                 backend=args.backend, algorithms=algos)
+        print(f"[matrix] serving winners index <- {n} record(s) "
+              f"({os.path.join(args.serve_dir, 'store.sqlite')})")
     if args.report:
         from repro.analysis import generate_report
 

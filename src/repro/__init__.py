@@ -17,7 +17,7 @@ The public front door is the declarative tuning facade::
 See ``docs/public_api.md`` for the spec schema and the backend registry.
 """
 
-__version__ = "0.8.0"
+__version__ = "0.9.0"
 
 from .core.api import (
     RunRecord,

@@ -553,6 +553,7 @@ class TuningSession:
             result.best_config, spec.final_repeats
         )
         self.save_store()
+        self._record_winner()
         res = {
             "best_config": result.best_config,
             "best_value": result.best_value,
@@ -788,6 +789,7 @@ class TuningSession:
         for cell in cell_results:
             results.add(cell)
         self.save_store()
+        self._record_winner()
         if tel.enabled:
             n_exp = {(algo, s): e for algo, s, e in cells}
             for (algo, s), w in sorted(self._last_cell_walls.items()):
@@ -812,6 +814,20 @@ class TuningSession:
             self._last_telemetry = {"counters": totals}
         self.last_record = self.make_record(results, wall_s=monotonic() - t0)
         return results
+
+    def _record_winner(self) -> None:
+        """Refresh the serving winners index after results land — the update
+        rides the store the results were just saved to, so the index is
+        maintained transactionally with its measurements.  Best-effort: the
+        serving index must never fail a tuning run."""
+        if self.store is None:
+            return
+        try:
+            from ..serving.winners import record_session_winner
+
+            record_session_winner(self)
+        except Exception as e:
+            warnings.warn(f"serving winner index update failed: {e}")
 
     # -- the work-unit layer --------------------------------------------------
     def _unit_cost(self) -> Callable[[ExperimentUnit], float]:

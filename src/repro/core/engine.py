@@ -99,6 +99,11 @@ class MeasurementStore:
     format; one with metadata writes ``{"__format__": 2, "values": ...,
     "meta": ...}`` (both formats load transparently).  ``inf`` itself
     round-trips through Python's JSON (``Infinity`` literal).
+
+    A third side-channel holds serving *winners* — per-geometry best-config
+    records maintained by ``repro.serving`` (format 3 adds a ``"winners"``
+    mapping; a store without winners keeps writing format <= 2, so
+    measurement-only stores stay byte-compatible across versions).
     """
 
     def __init__(self, path: str | None, autosave_every: int = 4096):
@@ -106,14 +111,18 @@ class MeasurementStore:
         self.autosave_every = autosave_every
         self._data: dict[str, float] = {}
         self._meta: dict[str, str] = {}
+        self._winners: dict[str, str] = {}
         self._dirty = 0
         if path is not None and os.path.exists(path):
             try:
                 with open(path) as f:
                     raw = json.load(f)
-                if isinstance(raw, dict) and raw.get("__format__") == 2:
+                if isinstance(raw, dict) and raw.get("__format__") in (2, 3):
                     self._data = {k: float(v) for k, v in raw["values"].items()}
                     self._meta = {k: str(v) for k, v in raw.get("meta", {}).items()}
+                    self._winners = {
+                        k: str(v) for k, v in raw.get("winners", {}).items()
+                    }
                 else:
                     self._data = {k: float(v) for k, v in raw.items()}
             except (json.JSONDecodeError, ValueError, TypeError, OSError) as e:
@@ -143,6 +152,22 @@ class MeasurementStore:
             self._data[k] = float(v)
             self._dirty += 1
 
+    def best_item(self, prefix: str, contains: str | None = None
+                  ) -> tuple[str, float] | None:
+        """The minimum-value finite entry under ``prefix`` (ties break on
+        key) — the scan behind the serving winner refresh.  ``contains``
+        restricts to keys holding that substring (e.g. ``"|final"`` to rank
+        only re-measured final timings, not noisy search samples)."""
+        best: tuple[str, float] | None = None
+        for k, v in self._data.items():
+            if not k.startswith(prefix) or not np.isfinite(v):
+                continue
+            if contains is not None and contains not in k:
+                continue
+            if best is None or (v, k) < (best[1], best[0]):
+                best = (k, float(v))
+        return best
+
     def put(self, key: str, value: float) -> None:
         self._data[key] = float(value)
         self._dirty += 1
@@ -167,17 +192,39 @@ class MeasurementStore:
             self._meta[k] = str(v)
             self._dirty += 1
 
+    # -- serving winners (repro.serving best-config index) ---------------------
+    def get_winner(self, key: str) -> str | None:
+        return self._winners.get(key)
+
+    def put_winner(self, key: str, payload: str) -> None:
+        self._winners[key] = str(payload)
+        self._dirty += 1
+
+    def winner_items(self):
+        return self._winners.items()
+
+    def update_winners(self, entries) -> None:
+        for k, v in entries:
+            self._winners[k] = str(v)
+            self._dirty += 1
+
     def save(self) -> None:
         if self.path is None:
             return
         d = os.path.dirname(self.path)
         if d:
             os.makedirs(d, exist_ok=True)
-        payload = (
-            {"__format__": 2, "values": self._data, "meta": self._meta}
-            if self._meta
-            else self._data
-        )
+        if self._winners:
+            payload = {
+                "__format__": 3,
+                "values": self._data,
+                "meta": self._meta,
+                "winners": self._winners,
+            }
+        elif self._meta:
+            payload = {"__format__": 2, "values": self._data, "meta": self._meta}
+        else:
+            payload = self._data
         fd, tmp = tempfile.mkstemp(dir=d or ".", suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:

@@ -11,7 +11,7 @@ session merges deterministically by unit key.  Built-ins:
   session at pool start (initializer), then pulls units one at a time from
   the shared submit queue — a worker that finishes early simply takes the
   next pending unit instead of idling behind a static partition.  Each
-  worker writes to its own ``store_path.shard<pid>`` (seeded from the warm
+  worker writes to its own ``store_path.<ns8>.shard<pid>`` (seeded from the warm
   parent store), journals completed units into it, and the parent glob-
   merges shard stores when the pool joins.
 * ``"futures"`` — the grouped worker payload submitted to ANY
@@ -49,18 +49,22 @@ trace shards, and re-raises.
 
 Worker crash/kill recovery: because workers journal completed units into
 their shard stores as they go, :func:`recover_shard_stores` can absorb
-leftover ``*.shard<k>`` files from a killed run into the parent store before
-a resumed run partitions its units — nothing a dead worker finished is lost.
+leftover ``*.<ns8>.shard<k>`` files from a killed run into the parent store
+before a resumed run partitions its units — nothing a dead worker finished is
+lost.  Shard filenames are namespaced by the session's journal-namespace
+digest, so recovery never absorbs shards a *different* spec left behind in a
+shared store directory.
 """
 
 from __future__ import annotations
 
 import os
 import re
+import zlib
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
-from .stores import make_store
+from .stores import absorb_winners, make_store
 from .workunits import ExperimentUnit, UnitResult
 
 __all__ = [
@@ -70,6 +74,8 @@ __all__ = [
     "recover_shard_stores",
     "register_executor",
     "run_units",
+    "shard_namespace",
+    "shard_store_path",
 ]
 
 
@@ -135,19 +141,42 @@ register_executor(Executor(name="serial", run=_run_serial, parallel=False))
 # ----------------------------------------------------- shard-store plumbing
 
 
-def _shard_store_path(session, shard: int) -> str | None:
+def shard_namespace(session) -> str:
+    """8-hex digest namespacing this session's shard-store filenames.
+
+    Derived from :meth:`TuningSession.journal_namespace` — the same
+    fingerprint that scopes unit-journal entries — so two different specs
+    sharing one store directory (or one store *path*) can never absorb each
+    other's leftover shards on recovery."""
+    ns = session.journal_namespace()
+    if ns is None:
+        # no stable fingerprint (live callables in the spec): fall back to
+        # the cache key, which still separates kernels/chips
+        ns = str(session.cache_key)
+    return f"{zlib.crc32(ns.encode('utf-8')) & 0xFFFFFFFF:08x}"
+
+
+def shard_store_path(session, ident) -> str | None:
+    """The shard-store filename for worker ``ident`` (pid, device index, or
+    a fleet worker's host-pid string): ``<store>.<ns8>.shard<ident>``."""
     if session.spec.store is None or session._store_path is None:
         return None
-    return f"{session._store_path}.shard{shard}"
+    return f"{session._store_path}.{shard_namespace(session)}.shard{ident}"
+
+
+def _shard_store_path(session, shard) -> str | None:
+    return shard_store_path(session, shard)
 
 
 def absorb_store(dst, kind: str, path: str) -> None:
     """Copy one store file's values AND metadata (which carries the unit
-    journal) into ``dst``."""
+    journal) into ``dst``; serving winner records merge under the
+    better-value / never-staler policy."""
     src = make_store(kind, path)
     dst.update(src.items())
     if hasattr(src, "meta_items"):
         dst.update_meta(src.meta_items())
+    absorb_winners(dst, src)
     if hasattr(src, "close"):
         src.close()
 
@@ -176,7 +205,13 @@ def recover_shard_stores(session) -> int:
     base = session._store_path
     if session.store is None or base is None:
         return 0
-    pattern = re.compile(re.escape(os.path.basename(base)) + r"\.shard\d+$")
+    # the namespace digest scopes recovery to THIS spec's shards: a different
+    # spec writing through the same store path leaves shards this glob must
+    # not absorb (its journal entries would be orphaned, its values wrong)
+    pattern = re.compile(
+        re.escape(f"{os.path.basename(base)}.{shard_namespace(session)}")
+        + r"\.shard[A-Za-z0-9_-]+$"
+    )
     d = os.path.dirname(base) or "."
     if not os.path.isdir(d):
         return 0
@@ -402,6 +437,13 @@ def _steal_context(plan: ExecutionPlan, spec_dict: dict) -> dict:
             if session.spec.store is not None and session._store_path is not None
             else None
         ),
+        # workers build `<store_base>.<shard_ns>.shard<ident>` — the parent
+        # computes the namespace once so every worker agrees on it
+        "shard_ns": (
+            shard_namespace(session)
+            if session.spec.store is not None and session._store_path is not None
+            else None
+        ),
         "base_store_path": base_store_path,
         "dataset": (
             None if dataset is None else (dataset.indices, dataset.values)
@@ -413,8 +455,8 @@ def _steal_context(plan: ExecutionPlan, spec_dict: dict) -> dict:
 def _build_worker_state(ctx: dict, ident: int) -> dict:
     """One persistent worker session keyed by ``ident`` (pid for process
     workers, device index for device threads): shard store
-    ``<base>.shard<ident>``, trace shard ``trace.shard<ident>.jsonl`` — both
-    names the parent's glob-based recovery already understands."""
+    ``<base>.<ns8>.shard<ident>``, trace shard ``trace.shard<ident>.jsonl``
+    — both names the parent's glob-based recovery already understands."""
     from .api import TuningSession, TuningSpec  # lazy: avoid an import cycle
     from .dataset import SampleDataset
 
@@ -430,7 +472,7 @@ def _build_worker_state(ctx: dict, ident: int) -> dict:
     store_path = (
         None
         if ctx.get("store_base") is None
-        else f"{ctx['store_base']}.shard{ident}"
+        else f"{ctx['store_base']}.{ctx['shard_ns']}.shard{ident}"
     )
     session = TuningSession(spec, store_path=store_path, telemetry=telemetry)
     base = ctx.get("base_store_path")

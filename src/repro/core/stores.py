@@ -15,6 +15,8 @@ routes here): ``make_store("sqlite", path)`` / ``make_store("json", path)``.
 
 from __future__ import annotations
 
+import json
+import math
 import os
 import sqlite3
 from typing import Iterable, Iterator
@@ -31,17 +33,35 @@ class SqliteMeasurementStore:
     tests and for shard workers that return their entries to the parent.
     Unlike the JSON store, entries hit the file incrementally: a 3M-entry
     run never rewrites the full history per flush.
+
+    File-backed databases run in WAL journal mode with a busy timeout
+    (``busy_timeout_ms``): the serving layer opens the same file from many
+    reader processes while a tuning session appends, and WAL gives readers a
+    consistent snapshot without blocking the writer.
     """
 
-    def __init__(self, path: str | None, autosave_every: int = 4096):
+    def __init__(self, path: str | None, autosave_every: int = 4096,
+                 busy_timeout_ms: int = 5000):
         self.path = path
         self.autosave_every = autosave_every
+        self.busy_timeout_ms = busy_timeout_ms
         self._dirty = 0
         if path is not None:
             d = os.path.dirname(path)
             if d:
                 os.makedirs(d, exist_ok=True)
-        self._conn = sqlite3.connect(path if path is not None else ":memory:")
+        # check_same_thread=False: the serving HTTP endpoint answers from
+        # handler threads behind one lock (ServingState.lock); sqlite itself
+        # is compiled serialized, so cross-thread use under external
+        # serialization is safe
+        self._conn = sqlite3.connect(
+            path if path is not None else ":memory:", check_same_thread=False
+        )
+        if path is not None:
+            # WAL is persistent: every later opener of the same file inherits
+            # it even if they skip the pragma
+            self._conn.execute("PRAGMA journal_mode=WAL")
+            self._conn.execute(f"PRAGMA busy_timeout={int(busy_timeout_ms)}")
         self._conn.execute(
             "CREATE TABLE IF NOT EXISTS measurements "
             "(key TEXT PRIMARY KEY, value REAL NOT NULL)"
@@ -51,6 +71,12 @@ class SqliteMeasurementStore:
         self._conn.execute(
             "CREATE TABLE IF NOT EXISTS meta "
             "(key TEXT PRIMARY KEY, note TEXT NOT NULL)"
+        )
+        # serving winners (repro.serving best-config index); mirrors
+        # MeasurementStore's winners side-channel
+        self._conn.execute(
+            "CREATE TABLE IF NOT EXISTS winners "
+            "(key TEXT PRIMARY KEY, payload TEXT NOT NULL)"
         )
         self._conn.commit()
 
@@ -90,6 +116,28 @@ class SqliteMeasurementStore:
         )
         self.save()
 
+    def best_item(self, prefix: str, contains: str | None = None
+                  ) -> tuple[str, float] | None:
+        """The minimum-value finite entry under ``prefix`` (ties break on
+        key), resolved inside sqlite — the serving winner refresh never
+        pages a 3M-row store through Python.  ``contains`` restricts to keys
+        holding that substring (e.g. ``"|final"``)."""
+
+        def esc(s: str) -> str:
+            return s.replace("\\", "\\\\").replace("%", "\\%").replace("_", "\\_")
+
+        sql = ("SELECT key, value FROM measurements "
+               "WHERE key LIKE ? ESCAPE '\\' AND value <= ? AND value >= ? ")
+        params: list = [esc(prefix) + "%",
+                        1.7976931348623157e308, -1.7976931348623157e308]
+        if contains is not None:
+            sql += "AND key LIKE ? ESCAPE '\\' "
+            params.append("%" + esc(contains) + "%")
+        row = self._conn.execute(
+            sql + "ORDER BY value ASC, key ASC LIMIT 1", params
+        ).fetchone()
+        return None if row is None else (str(row[0]), float(row[1]))
+
     # -- per-key metadata (penalty reasons) ------------------------------------
     def get_meta(self, key: str) -> str | None:
         row = self._conn.execute(
@@ -125,9 +173,86 @@ class SqliteMeasurementStore:
         )
         self.save()
 
+    # -- serving winners (repro.serving best-config index) ---------------------
+    def get_winner(self, key: str) -> str | None:
+        row = self._conn.execute(
+            "SELECT payload FROM winners WHERE key = ?", (key,)
+        ).fetchone()
+        return None if row is None else str(row[0])
+
+    def put_winner(self, key: str, payload: str) -> None:
+        self._conn.execute(
+            "INSERT OR REPLACE INTO winners (key, payload) VALUES (?, ?)",
+            (key, str(payload)),
+        )
+        self._dirty += 1
+        if self.autosave_every and self._dirty >= self.autosave_every:
+            self.save()
+
+    def winner_items(self) -> Iterator[tuple[str, str]]:
+        for key, payload in self._conn.execute("SELECT key, payload FROM winners"):
+            yield key, str(payload)
+
+    def update_winners(self, entries: Iterable[tuple[str, str]]) -> None:
+        self._conn.executemany(
+            "INSERT OR REPLACE INTO winners (key, payload) VALUES (?, ?)",
+            ((k, str(v)) for k, v in entries),
+        )
+        self.save()
+
     def close(self) -> None:
         self._conn.commit()
         self._conn.close()
+
+
+def merge_winner_payloads(old: str | None, new: str) -> str:
+    """Resolve two winner records for the same key: the lower measured value
+    wins (ties keep the newer record), and the freshness stamp never moves
+    backwards — merging a stale shard into a store that already saw a newer
+    update must not make the entry look older than it is.  Unparseable
+    payloads lose to parseable ones (last-writer-wins between two)."""
+    if old is None:
+        return str(new)
+
+    def _load(payload: str) -> dict | None:
+        try:
+            d = json.loads(payload)
+        except ValueError:
+            return None
+        return d if isinstance(d, dict) else None
+
+    a, b = _load(old), _load(new)
+    if b is None:
+        return str(old) if a is not None else str(new)
+    if a is None:
+        return str(new)
+
+    def _value(d: dict) -> float:
+        try:
+            return float(d.get("value", math.inf))
+        except (TypeError, ValueError):
+            return math.inf
+
+    def _fresh(d: dict) -> float:
+        try:
+            return float(d.get("fresh", 0.0))
+        except (TypeError, ValueError):
+            return 0.0
+
+    if _value(b) != _value(a):
+        keep = dict(b if _value(b) < _value(a) else a)
+    else:  # value tie: the fresher record answers — merge-order independent
+        keep = dict(b if _fresh(b) >= _fresh(a) else a)
+    keep["fresh"] = max(_fresh(a), _fresh(b))
+    return json.dumps(keep, sort_keys=True)
+
+
+def absorb_winners(dst, src) -> None:
+    """Fold ``src``'s winner records into ``dst`` under the merge policy."""
+    if not (hasattr(src, "winner_items") and hasattr(dst, "put_winner")):
+        return
+    for key, payload in src.winner_items():
+        dst.put_winner(key, merge_winner_payloads(dst.get_winner(key), payload))
 
 
 #: store-kind registry, mirroring SEARCHERS / BACKENDS.

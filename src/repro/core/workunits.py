@@ -30,6 +30,7 @@ Executors (:mod:`repro.core.executors`) consume units and return
 from __future__ import annotations
 
 import json
+import zlib
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -43,7 +44,20 @@ __all__ = [
     "UnitResult",
     "build_units",
     "merge_unit_results",
+    "unit_digest",
 ]
+
+
+def unit_digest(unit_key: str) -> str:
+    """Filesystem-safe 8-hex digest of a unit key (keys carry ``/`` + ``:``).
+
+    The unit's cross-host identity: the serving fleet names claim and done
+    marker files ``<job>.u<digest>.*`` with it, so every worker — sharing
+    nothing but the queue directory — derives the same name for the same
+    unit.  crc32 over the stable :attr:`ExperimentUnit.key`, so the digest
+    survives process restarts and host boundaries.
+    """
+    return f"{zlib.crc32(unit_key.encode('utf-8')) & 0xFFFFFFFF:08x}"
 
 
 @dataclass(frozen=True)

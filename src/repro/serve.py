@@ -1,0 +1,35 @@
+"""Stable serving facade: ``repro.serve.best_config(...)``.
+
+The one-import answer to "give me the best config for this kernel on this
+geometry and device" — backed by the winners index :mod:`repro.serving`
+maintains inside the measurement store::
+
+    import repro.serve
+
+    store, kind = repro.serve.open_serve_store("serve/store.sqlite")
+    res = repro.serve.best_config(store, "add", 8192, 8192, "v5e")
+    if res.status in ("hit", "stale", "nearest"):
+        launch(res.config)
+
+See :mod:`repro.serving` for the query semantics (hit / stale / nearest /
+miss), the job queue behind enqueue-on-miss, and the fleet workers that
+fill misses in.
+"""
+
+from __future__ import annotations
+
+from .serving.api import (
+    ServeResult,
+    best_config,
+    default_miss_spec,
+    open_serve_store,
+    store_kind_for_path,
+)
+
+__all__ = [
+    "ServeResult",
+    "best_config",
+    "default_miss_spec",
+    "open_serve_store",
+    "store_kind_for_path",
+]

@@ -28,9 +28,12 @@ from .prov import SINK_NAMES, _called_names
 
 #: identifiers that mark telemetry plumbing; substrings are NOT matched —
 #: a token must be the whole name / attribute / string constant, so e.g.
-#: ``backtrace`` or ``retrace`` never false-positive
+#: ``backtrace`` or ``retrace`` never false-positive.  The serving layer's
+#: plumbing (``serve_dir`` — where the winners index lives, ``qdir`` /
+#: ``queue_dir`` — where fleet claims live) is equally identity-free: the
+#: same spec tuned through any serve dir must produce the same store bytes.
 TELEMETRY_TOKENS = ("telemetry", "tracer", "trace_path", "trace_dir",
-                    "trace_src")
+                    "trace_src", "serve_dir", "qdir", "queue_dir")
 
 
 def _token_mentions(fn: ast.FunctionDef) -> list[tuple[str, int]]:

@@ -40,6 +40,11 @@ SPEED_KNOBS = (
     "futures_pool",
     "scheduler",
     "compile_cache",
+    # fleet pacing (repro.serving): how fast a queue drains, never what the
+    # tuned values are — byte-identity of fleet vs serial runs depends on it
+    "claim_timeout_s",
+    "poll_s",
+    "stall_s",
 )
 
 SINK_NAMES = ("default_cache_key", "journal_namespace", "_spec_fingerprint")

@@ -167,7 +167,8 @@ def check_executors_and_stores() -> list[Finding]:
                     f"EXECUTORS[{name!r}].run is not callable",
                 )
             )
-    required = ("get", "put", "save", "items", "get_meta", "put_meta")
+    required = ("get", "put", "save", "items", "get_meta", "put_meta",
+                "get_winner", "put_winner", "winner_items")
     for name, cls in sorted(STORES.items()):
         missing = [m for m in required if not callable(getattr(cls, m, None))]
         if missing:

@@ -104,6 +104,18 @@ def invalid_histogram(counters: dict) -> dict[str, int]:
     }
 
 
+def serving_counters(counters: dict) -> dict:
+    """The serving/fleet slice of the counter totals: query outcomes
+    (``serve.hits`` / ``serve.misses`` / ``serve.nearest`` / ``serve.stale``
+    / ``serve.enqueued``), the ``serve.queue_depth`` gauge, and the fleet's
+    ``fleet.*`` progress counters."""
+    return {
+        k: counters[k]
+        for k in sorted(counters)
+        if k.startswith(("serve.", "fleet."))
+    }
+
+
 def summarize(run_dir: str, top: int = 10) -> dict:
     """Everything the ``summarize`` subcommand renders, as plain data."""
     events = read_run(run_dir)
@@ -123,6 +135,7 @@ def summarize(run_dir: str, top: int = 10) -> dict:
         "stages": stage_percentiles(events),
         "slowest_compiles": slowest_compiles(events, top=top),
         "invalid": invalid_histogram(counters),
+        "serving": serving_counters(counters),
     }
 
 
@@ -175,6 +188,10 @@ def render_summary(s: dict) -> str:
         rows = [[rule, n] for rule, n in s["invalid"].items()]
         out.append("\ninvalid configs by rule")
         out.append(_table(rows, ["rule", "count"]))
+    if s["serving"]:
+        rows = [[k, s["serving"][k]] for k in sorted(s["serving"])]
+        out.append("\nserving / fleet")
+        out.append(_table(rows, ["counter", "total"]))
     if s["counters"]:
         rows = [[k, s["counters"][k]] for k in sorted(s["counters"])]
         out.append("\ncounter totals")

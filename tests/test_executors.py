@@ -22,7 +22,12 @@ from repro.core import (
     build_units,
     merge_unit_results,
 )
-from repro.core.executors import ExecutionPlan, run_units
+from repro.core.executors import (
+    ExecutionPlan,
+    run_units,
+    shard_namespace,
+    shard_store_path,
+)
 
 SMOKE = dict(kernel="harris", backend_kwargs={"chip": "v5e"})
 
@@ -356,13 +361,14 @@ def test_resume_recovers_killed_workers_shard_stores(tmp_path, monkeypatch):
     # that never became the parent store
     ghost = TuningSession(spec.replace(store_path=str(tmp_path / "ghost.json")))
     ghost_res = ghost.run_matrix()
-    shutil.move(str(tmp_path / "ghost.json"), str(tmp_path / "c.json.shard0"))
 
     ran = spy_run_unit(monkeypatch)
     resumed = TuningSession(spec)
+    shard = shard_store_path(resumed, 0)
+    shutil.move(str(tmp_path / "ghost.json"), shard)
     res = resumed.run_matrix(resume=True)
     assert ran == []                            # everything recovered
-    assert not os.path.exists(str(tmp_path / "c.json.shard0"))
+    assert not os.path.exists(shard)
     assert_same_cells(ghost_res, res)
 
 
@@ -485,13 +491,46 @@ def test_resume_recovers_pid_shaped_steal_shards(tmp_path, monkeypatch):
     )
     ghost = TuningSession(spec.replace(store_path=str(tmp_path / "ghost.json")))
     ghost_res = ghost.run_matrix()
-    shutil.move(str(tmp_path / "ghost.json"), str(tmp_path / "c.json.shard31337"))
 
     ran = spy_run_unit(monkeypatch)
-    res = TuningSession(spec).run_matrix(resume=True)
+    resumed = TuningSession(spec)
+    shard = shard_store_path(resumed, 31337)
+    shutil.move(str(tmp_path / "ghost.json"), shard)
+    res = resumed.run_matrix(resume=True)
     assert ran == []
-    assert not os.path.exists(str(tmp_path / "c.json.shard31337"))
+    assert not os.path.exists(shard)
     assert_same_cells(ghost_res, res)
+
+
+def test_recovery_ignores_other_specs_shards(tmp_path, monkeypatch):
+    """Regression: shard filenames carry the journal-namespace digest, so a
+    resumed run must NOT absorb a shard left behind by a *different* spec
+    writing through the same store path (absorbing it would orphan journal
+    entries and serve values from the wrong experiment)."""
+    spec_a = SPEC.replace(
+        algorithms=("rs",), store="json", store_path=str(tmp_path / "c.json"),
+    )
+    spec_b = spec_a.replace(seed=SPEC.seed + 1)   # different experiment stream
+    assert (shard_namespace(TuningSession(spec_a))
+            != shard_namespace(TuningSession(spec_b)))
+
+    # a killed run of spec B left a fully-journaled shard beside c.json
+    ghost = TuningSession(spec_b.replace(store_path=str(tmp_path / "ghost.json")))
+    ghost.run_matrix()
+    foreign = shard_store_path(TuningSession(spec_b), 0)
+    shutil.move(str(tmp_path / "ghost.json"), foreign)
+
+    ran = spy_run_unit(monkeypatch)
+    res_a = TuningSession(spec_a).run_matrix(resume=True)
+    assert ran != []                    # nothing recovered: A ran its own units
+    assert os.path.exists(foreign)      # B's shard survives untouched
+
+    # and B itself can still resume from its shard afterwards
+    ran_b = spy_run_unit(monkeypatch)
+    res_b = TuningSession(spec_b).run_matrix(resume=True)
+    assert ran_b == []
+    assert not os.path.exists(foreign)
+    del res_a, res_b
 
 
 # ------------------------------------------------------------- wall-clock
@@ -519,3 +558,113 @@ def test_cell_wall_clock_lands_in_record_and_figures(tmp_path):
     assert "search cost" in render_grid(
         table, fmt="{0[wall]:.2f}s", title="search cost"
     )
+
+
+# ------------------------------------------------------- fleet chaos (SIGKILL)
+
+
+def test_fleet_sigkill_peer_steals_and_store_is_byte_identical(tmp_path):
+    """Three cross-process fleet workers; one is SIGKILLed mid-unit (inside
+    its ``--stall-s`` window, holding a claim).  The peers must steal the
+    dead worker's claim, finish the job, and the collected parent store must
+    be byte-identical to a serial run of the same spec."""
+    import importlib.util
+    import signal
+    import subprocess
+    import sys
+    import time
+
+    from repro.core.stores import make_store
+    from repro.serving import JobQueue, collect_jobs, job_id_for_spec
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"))
+    serve_dir = str(tmp_path / "serve")
+    os.makedirs(serve_dir)
+    store_path = os.path.join(serve_dir, "store.json")
+    qdir = os.path.join(serve_dir, "queue")
+
+    spec = SPEC.replace(store="json", store_path=store_path)
+    store = make_store("json", store_path)
+    queue = JobQueue(store, "json", store_path, qdir)
+    jid = queue.enqueue(spec)
+    assert jid == job_id_for_spec(
+        spec.replace(store="json", store_path=store_path).to_dict()
+    )
+
+    def worker_cmd(ident, stall_s, claim_timeout_s, timeout_s):
+        return [
+            sys.executable, "-m", "repro.serving", "worker",
+            "--dir", serve_dir, "--store", "json", "--ident", ident,
+            "--stall-s", str(stall_s), "--claim-timeout-s", str(claim_timeout_s),
+            "--timeout-s", str(timeout_s), "--poll-s", "0.05",
+        ]
+
+    # the victim stalls 60s after its first claim: an arbitrarily wide kill
+    # window (we kill as soon as the claim file appears)
+    victim = subprocess.Popen(
+        worker_cmd("victim", 60, 1000, 120), env=env, cwd=repo,
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+    )
+    try:
+        deadline = time.monotonic() + 60
+        claimed = None
+        while time.monotonic() < deadline:
+            for f in os.listdir(qdir) if os.path.isdir(qdir) else []:
+                if f.endswith(".claim"):
+                    with open(os.path.join(qdir, f)) as fh:
+                        if fh.read() == "victim":
+                            claimed = f
+                            break
+            if claimed or victim.poll() is not None:
+                break
+            time.sleep(0.05)
+        assert claimed, (
+            f"victim never claimed a unit: {victim.communicate()[0]!r}"
+        )
+        os.kill(victim.pid, signal.SIGKILL)
+    finally:
+        victim.wait(timeout=30)
+
+    # peers arrive late: the victim's claim is already stale for them
+    peers = [
+        subprocess.Popen(
+            worker_cmd(ident, 0, 1.0, 90), env=env, cwd=repo,
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        )
+        for ident in ("w2", "w3")
+    ]
+    outs = [p.communicate(timeout=120)[0] for p in peers]
+    for p, out in zip(peers, outs, strict=True):
+        assert p.returncode == 0, out
+
+    # done markers, inspected BEFORE collect cleans them up: every unit has
+    # one, none was run by the victim, and the victim's unit was stolen
+    done = []
+    for f in sorted(os.listdir(qdir)):
+        if f.endswith(".done"):
+            done.append(json.load(open(os.path.join(qdir, f))))
+    assert done, "no done markers published"
+    assert all(d["ident"] in ("w2", "w3") for d in done)
+    stolen = [d for d in done if d["stolen"]]
+    assert len(stolen) == 1, stolen
+    assert stolen[0]["ident"] != "victim"
+
+    assert collect_jobs("json", store_path, qdir) == [jid]
+    q2 = JobQueue(make_store("json", store_path), "json", store_path, qdir)
+    assert q2.job(jid)["state"] == "done"
+    assert q2.job(jid)["done_ident"] == "collect"
+
+    # byte-identity against the serial reference, through the same tool the
+    # executor-equivalence contract ships (tools/compare_stores.py)
+    serial_path = str(tmp_path / "serial.json")
+    TuningSession(spec.replace(store_path=serial_path)).run_matrix()
+    tool_spec = importlib.util.spec_from_file_location(
+        "compare_stores", os.path.join(repo, "tools", "compare_stores.py")
+    )
+    tool = importlib.util.module_from_spec(tool_spec)
+    tool_spec.loader.exec_module(tool)
+    assert tool.values_bytes(tool.load(store_path)) == tool.values_bytes(
+        tool.load(serial_path)
+    )
+    assert tool.main([store_path, serial_path]) == 0

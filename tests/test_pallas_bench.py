@@ -400,17 +400,24 @@ def test_warm_store_rerun_zero_recompiles(tmp_path):
 def store_sections(path):
     """(values, non-journal meta, journal keys) of a JSON store file.  Unit-
     journal entries carry per-run wall-clocks, which legitimately differ
-    between two runs of the same matrix; everything else must not."""
+    between two runs of the same matrix; everything else must not.  Serving
+    winners (format 3) fold into values minus their wall-clock ``fresh``
+    stamp — the winner's config/value/provenance must be run-invariant."""
     import json
 
     with open(path) as f:
         raw = json.load(f)
-    if not (isinstance(raw, dict) and raw.get("__format__") == 2):
+    if not (isinstance(raw, dict) and raw.get("__format__") in (2, 3)):
         return raw, {}, set()
     meta = raw.get("meta", {})
     journal = {k for k in meta if k.startswith("__unit__|")}
+    values = dict(raw["values"])
+    for key, payload in raw.get("winners", {}).items():
+        rec = json.loads(payload)
+        rec.pop("fresh", None)
+        values["__winner__|" + key] = json.dumps(rec, sort_keys=True)
     return (
-        raw["values"],
+        values,
         {k: v for k, v in meta.items() if k not in journal},
         journal,
     )

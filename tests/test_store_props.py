@@ -1,0 +1,378 @@
+"""Property tests for the store layer and unit-result merging.
+
+Randomized invariants rather than example-based pins:
+
+* arbitrary (key, value, meta, winners) content survives a JSON-store
+  save/load round-trip, a sqlite save/reopen round-trip, and a cross-format
+  absorb — the two backends are interchangeable bit-for-bit;
+* prefix queries (``meta_items``, ``best_item``) agree between the python
+  scan and the sqlite ``LIKE`` (whose ``%`` / ``_`` / ``\\`` escaping is
+  exactly the kind of thing only adversarial keys catch);
+* ``merge_unit_results`` reassembles any contiguous fragmentation of any
+  cell set back to the unfragmented arrays, and rejects every gap,
+  duplicate, and overlap;
+* ``UnitJournal.cover`` composes fragments journaled under different unit
+  boundaries into any covered query unit, positionally exact;
+* the winner merge is order-independent: folding any permutation of
+  records yields the same best value and freshness.
+
+Runs under ``hypothesis`` when installed (randomized seeds, shrinking);
+falls back to a deterministic seed sweep otherwise — the container image
+does not ship hypothesis, and the properties hold either way.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import random
+import string
+
+import numpy as np
+import pytest
+
+from repro.core import ExperimentUnit, UnitResult, merge_unit_results
+from repro.core.stores import (
+    MeasurementStore,
+    SqliteMeasurementStore,
+    absorb_winners,
+    merge_winner_payloads,
+)
+from repro.core.workunits import UnitJournal
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def property_test(cases: int = 40):
+    """Run ``fn(rng)`` across many seeds — hypothesis-driven when available
+    (it explores and shrinks the seed space), a fixed sweep otherwise."""
+
+    def deco(fn):
+        if HAVE_HYPOTHESIS:
+            @settings(max_examples=cases, deadline=None)
+            @given(st.integers(min_value=0, max_value=2**63 - 1))
+            @functools.wraps(fn)
+            def hyp_wrapper(seed):
+                fn(random.Random(seed))
+            return hyp_wrapper
+
+        @functools.wraps(fn)
+        def sweep_wrapper():
+            for seed in range(cases):
+                fn(random.Random(seed))
+        return sweep_wrapper
+
+    return deco
+
+
+KEY_ALPHABET = string.ascii_letters + string.digits + "/|=,.:%_\\-+ é€"
+
+
+def rand_key(rng: random.Random) -> str:
+    return "".join(
+        rng.choice(KEY_ALPHABET) for _ in range(rng.randint(1, 24))
+    )
+
+
+def rand_value(rng: random.Random) -> float:
+    v = rng.choice([
+        rng.uniform(-1e6, 1e6),
+        rng.uniform(-1e-9, 1e-9),
+        float(rng.randint(-10, 10)),
+        5e-324 * rng.randint(1, 9),            # subnormals
+        rng.uniform(0, 1) * 10 ** rng.randint(-300, 300),
+    ])
+    return float(v)
+
+
+def rand_store_content(rng: random.Random) -> tuple[dict, dict, dict]:
+    values = {rand_key(rng): rand_value(rng)
+              for _ in range(rng.randint(0, 30))}
+    meta = {rand_key(rng): rand_key(rng) for _ in range(rng.randint(0, 10))}
+    winners = {
+        f"k{i}|x={rng.randint(1, 9999)}|y={rng.randint(1, 9999)}|dev": json.dumps(
+            {"config": {"t": rng.randint(1, 64)},
+             "value": rand_value(rng),
+             "fresh": rng.uniform(0, 1e9),
+             "fingerprint": rand_key(rng)},
+            sort_keys=True,
+        )
+        for i in range(rng.randint(0, 5))
+    }
+    return values, meta, winners
+
+
+def fill(store, values, meta, winners):
+    for k, v in values.items():
+        store.put(k, v)
+    for k, v in meta.items():
+        store.put_meta(k, v)
+    for k, v in winners.items():
+        store.put_winner(k, v)
+
+
+def snapshot(store) -> tuple[dict, dict, dict]:
+    return (dict(store.items()), dict(store.meta_items()),
+            dict(store.winner_items()))
+
+
+# ------------------------------------------------------- store round-tripping
+
+
+@property_test()
+def prop_json_store_roundtrip(rng):
+    import tempfile
+    values, meta, winners = rand_store_content(rng)
+    with tempfile.TemporaryDirectory() as d:
+        path = f"{d}/s.json"
+        store = MeasurementStore(path)
+        fill(store, values, meta, winners)
+        store.save()
+        assert snapshot(MeasurementStore(path)) == (values, meta, winners)
+
+
+def test_json_store_roundtrip():
+    prop_json_store_roundtrip()
+
+
+@property_test()
+def prop_sqlite_store_roundtrip(rng):
+    import tempfile
+    values, meta, winners = rand_store_content(rng)
+    with tempfile.TemporaryDirectory() as d:
+        path = f"{d}/s.sqlite"
+        store = SqliteMeasurementStore(path)
+        fill(store, values, meta, winners)
+        store.save()
+        store.close()
+        reopened = SqliteMeasurementStore(path)
+        assert snapshot(reopened) == (values, meta, winners)
+        reopened.close()
+
+
+def test_sqlite_store_roundtrip():
+    prop_sqlite_store_roundtrip()
+
+
+@property_test()
+def prop_cross_format_absorb_is_lossless(rng):
+    values, meta, winners = rand_store_content(rng)
+    src = MeasurementStore(None)
+    fill(src, values, meta, winners)
+    dst = SqliteMeasurementStore(None)
+    dst.update(src.items())
+    dst.update_meta(src.meta_items())
+    absorb_winners(dst, src)
+    got_values, got_meta, got_winners = snapshot(dst)
+    assert (got_values, got_meta) == (values, meta)
+    # absorb merges: with an empty dst every src record lands verbatim
+    assert got_winners == winners
+    dst.close()
+
+
+def test_cross_format_absorb_is_lossless():
+    prop_cross_format_absorb_is_lossless()
+
+
+# ------------------------------------------------------------ prefix queries
+
+
+@property_test()
+def prop_meta_prefix_query_matches_python_scan(rng):
+    _, meta, _ = rand_store_content(rng)
+    js, sq = MeasurementStore(None), SqliteMeasurementStore(None)
+    for k, v in meta.items():
+        js.put_meta(k, v)
+        sq.put_meta(k, v)
+    # prefixes biased toward LIKE metacharacters and real key heads
+    prefix = rng.choice(
+        ["%", "_", "\\", "%_", "k", ""]
+        + [k[: rng.randint(0, len(k))] for k in (list(meta) or ["x"])]
+    )
+    expect = {k: v for k, v in meta.items() if k.startswith(prefix)}
+    assert dict(js.meta_items(prefix=prefix)) == expect
+    assert dict(sq.meta_items(prefix=prefix)) == expect
+    sq.close()
+
+
+def test_meta_prefix_query_matches_python_scan():
+    prop_meta_prefix_query_matches_python_scan()
+
+
+@property_test()
+def prop_best_item_agrees_across_backends(rng):
+    values, _, _ = rand_store_content(rng)
+    js, sq = MeasurementStore(None), SqliteMeasurementStore(None)
+    for k, v in values.items():
+        js.put(k, v)
+        sq.put(k, v)
+    prefix = rng.choice(
+        ["", "%", "_"] + [k[: rng.randint(0, len(k))]
+                          for k in (list(values) or ["x"])]
+    )
+    contains = rng.choice([None, "|", "final", "%", "_"])
+    expect = None
+    for k, v in values.items():
+        if not k.startswith(prefix):
+            continue
+        if contains is not None and contains not in k:
+            continue
+        if expect is None or (v, k) < (expect[1], expect[0]):
+            expect = (k, v)
+    assert js.best_item(prefix, contains) == expect
+    assert sq.best_item(prefix, contains) == expect
+    sq.close()
+
+
+def test_best_item_agrees_across_backends():
+    prop_best_item_agrees_across_backends()
+
+
+# ------------------------------------------------------- merge_unit_results
+
+
+def rand_partition(rng: random.Random, n: int) -> list[tuple[int, int]]:
+    """A random contiguous partition of [0, n)."""
+    cuts = sorted(rng.sample(range(1, n), rng.randint(0, n - 1))) if n > 1 else []
+    bounds = [0, *cuts, n]
+    return list(zip(bounds[:-1], bounds[1:], strict=False))
+
+
+def fragments_for(cells, rng) -> list[UnitResult]:
+    frags = []
+    for algo, s, e in cells:
+        for lo, hi in rand_partition(rng, e):
+            unit = ExperimentUnit(algo=algo, sample_size=s,
+                                  exp_lo=lo, exp_hi=hi, n_exp=e)
+            idx = np.arange(lo, hi, dtype=np.float64)
+            frags.append(UnitResult(
+                unit=unit,
+                final_values=idx + 0.5,
+                search_best_values=idx + 0.25,
+                n_samples_used=np.arange(lo, hi, dtype=np.int64),
+                wall_s=float(hi - lo),
+            ))
+    rng.shuffle(frags)
+    return frags
+
+
+@property_test()
+def prop_merge_reassembles_any_fragmentation(rng):
+    cells = [
+        (algo, s, rng.randint(1, 12))
+        for algo, s in {("rs", 25), ("ga", 50), ("rf", 100)}
+        if rng.random() < 0.8
+    ] or [("rs", 25, 4)]
+    frags = fragments_for(cells, rng)
+    merged, walls = merge_unit_results(cells, frags)
+    assert [(c.algo, c.sample_size) for c in merged] == [
+        (a, s) for a, s, _ in cells
+    ]
+    for cell, (_, _, e) in zip(merged, cells, strict=True):
+        np.testing.assert_array_equal(
+            cell.final_values, np.arange(e, dtype=np.float64) + 0.5
+        )
+        np.testing.assert_array_equal(
+            cell.n_samples_used, np.arange(e, dtype=np.int64)
+        )
+    for (algo, s, e) in cells:
+        # wall clock is additive over fragments: sums back to the cell total
+        assert walls[(algo, s)]["wall_s"] == pytest.approx(float(e))
+
+
+def test_merge_reassembles_any_fragmentation():
+    prop_merge_reassembles_any_fragmentation()
+
+
+@property_test()
+def prop_merge_rejects_gaps_and_duplicates(rng):
+    e = rng.randint(2, 10)
+    cells = [("rs", 25, e)]
+    frags = fragments_for(cells, rng)
+    if rng.random() < 0.5 or len(frags) == 1:
+        # drop one fragment -> coverage gap (or, for a single fragment,
+        # an empty cell)
+        drop = rng.randrange(len(frags))
+        broken = [f for i, f in enumerate(frags) if i != drop]
+        with pytest.raises(ValueError):
+            merge_unit_results(cells, broken)
+    else:
+        dup = rng.choice(frags)
+        with pytest.raises(ValueError, match="duplicate"):
+            merge_unit_results(cells, [*frags, dup])
+
+
+def test_merge_rejects_gaps_and_duplicates():
+    prop_merge_rejects_gaps_and_duplicates()
+
+
+# --------------------------------------------------------- journal coverage
+
+
+@property_test(cases=30)
+def prop_journal_cover_composes_fragments(rng):
+    e = rng.randint(1, 12)
+    store = MeasurementStore(None)
+    journal = UnitJournal(store, "ns", min_flush_s=0.0)
+    for frag in fragments_for([("ga", 25, e)], rng):
+        journal.put(frag)
+    lo = rng.randrange(e)
+    hi = rng.randint(lo + 1, e)
+    query = ExperimentUnit(algo="ga", sample_size=25,
+                           exp_lo=lo, exp_hi=hi, n_exp=e)
+    got = journal.cover(query)
+    assert got is not None
+    np.testing.assert_array_equal(
+        got.final_values, np.arange(lo, hi, dtype=np.float64) + 0.5
+    )
+    np.testing.assert_array_equal(
+        got.n_samples_used, np.arange(lo, hi, dtype=np.int64)
+    )
+    # a different cell is never covered
+    other = ExperimentUnit(algo="rs", sample_size=25,
+                           exp_lo=0, exp_hi=1, n_exp=e)
+    assert journal.cover(other) is None
+
+
+def test_journal_cover_composes_fragments():
+    prop_journal_cover_composes_fragments()
+
+
+# ------------------------------------------------------------- winner merge
+
+
+@property_test()
+def prop_winner_merge_is_order_independent(rng):
+    n = rng.randint(1, 8)
+    payloads = [
+        json.dumps({
+            "config": {"i": i},
+            "value": rng.choice([1.0, 2.0, rng.uniform(0, 3)]),
+            "fresh": rng.uniform(0, 100),
+        }, sort_keys=True)
+        for i in range(n)
+    ]
+
+    def fold(order):
+        acc = None
+        for p in order:
+            acc = merge_winner_payloads(acc, p)
+        return json.loads(acc)
+
+    shuffled = list(payloads)
+    rng.shuffle(shuffled)
+    a, b = fold(payloads), fold(shuffled)
+    assert a["value"] == b["value"]
+    assert a["fresh"] == b["fresh"]
+    assert a["value"] == min(json.loads(p)["value"] for p in payloads)
+    assert a["fresh"] == max(json.loads(p)["fresh"] for p in payloads)
+
+
+def test_winner_merge_is_order_independent():
+    prop_winner_merge_is_order_independent()

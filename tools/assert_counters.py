@@ -3,8 +3,10 @@
 `make smoke-matrix` uses this to turn the trace into a gate: the warm
 persistent-compile-cache pass must report ``compiles==0``, and the stealing
 pass must have planned under ``scheduler=steal``.  Assertions are simple
-comparisons against the FINAL ``totals`` event's counters, with missing
-keys reading as 0:
+comparisons against the FINAL ``totals`` event's counters (or, for
+standalone traces with no parent merge — serving queries, fleet workers —
+the sum of all writers' cumulative snapshots), with missing keys reading
+as 0:
 
     python tools/assert_counters.py RUN_DIR "compiles==0" "pcache.hits>0" \\
         --plan scheduler=steal
@@ -51,8 +53,11 @@ def main(argv: list[str] | None = None) -> int:
     if not events:
         print(f"[assert_counters] no trace events under {args.run_dir}")
         return 1
-    totals = [e for e in events if e.get("ev") == "totals"]
-    counters = totals[-1].get("counters", {}) if totals else {}
+    # the last totals event when a parent merged one, else the sum of all
+    # writers' cumulative snapshots (standalone traces — serving, workers)
+    from repro.telemetry.summarize import sum_counters
+
+    counters = sum_counters(events)
     plans = [e for e in events if e.get("ev") == "plan"]
 
     failed: list[str] = []
